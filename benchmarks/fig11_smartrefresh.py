@@ -1,0 +1,60 @@
+"""Paper Fig. 11: RTC vs SmartRefresh [17] on an 8 GB module.
+
+Setup per Section VI-B: row size 2048 B (4,194,304 rows -> one 3-bit
+counter each for SmartRefresh), multiple CNN instances co-run at 60 fps
+to utilize bandwidth.  Validates: RTC saves ~28% (access-heavy mixes)
+to ~96% (LeNet-only) more DRAM energy than SmartRefresh.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json, timed
+from repro.core.allocator import allocate_workload
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import MODULE_8GB
+from repro.core.rtc import Variant, evaluate
+from repro.core.workload import from_cnn, merge
+
+MIXES = [
+    ("LN", [("lenet", 1)]),
+    ("GN", [("googlenet", 1)]),
+    ("AN", [("alexnet", 1)]),
+    ("AN+GN", [("alexnet", 1), ("googlenet", 1)]),
+    ("2AN+2GN+LN", [("alexnet", 2), ("googlenet", 2), ("lenet", 1)]),
+]
+
+
+def run():
+    spec = MODULE_8GB
+    rows = []
+    for label, parts in MIXES:
+        ws = []
+        for cnn, n in parts:
+            w = from_cnn(CNN_ZOO[cnn], fps=60)
+            ws.extend([w] * n)
+        wl = merge(label, *ws)
+        alloc = allocate_workload(spec, {"data": wl.footprint_bytes})
+        rtc = evaluate(spec, wl, Variant.FULL_RTC, alloc)
+        smart = evaluate(spec, wl, Variant.SMART_REFRESH, alloc)
+        rows.append({
+            "mix": label,
+            "rtc_savings": rtc.dram_savings,
+            "smart_savings": smart.dram_savings,
+            "rtc_over_smart": rtc.dram_savings - smart.dram_savings,
+        })
+    return rows
+
+
+def main():
+    rows, us = timed(run, repeat=1)
+    for r in rows:
+        emit(f"fig11_{r['mix']}", us / len(rows),
+             f"rtc={r['rtc_savings']:.3f} smart={r['smart_savings']:.3f} "
+             f"delta={r['rtc_over_smart']:.3f}")
+    deltas = [r["rtc_over_smart"] for r in rows]
+    emit("fig11_delta_range", us / len(rows),
+         f"{min(deltas):.2f}..{max(deltas):.2f} (paper ~0.28..0.96)")
+    save_json("fig11_smartrefresh", rows)
+
+
+if __name__ == "__main__":
+    main()

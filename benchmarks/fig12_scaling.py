@@ -1,0 +1,60 @@
+"""Paper Fig. 12: refresh share of DRAM energy vs chip density.
+
+A chip running at peak bandwidth (the paper's setup, [24,35]): refresh
+grows toward ~46-47% of DRAM energy at 64 Gb for conventional DRAM,
+while RTC-enabled DRAM nearly eliminates it for CNN-style workloads
+(PAAR bounds refresh to the footprint; RTT coalesces within it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, save_json, timed
+from repro.core.allocator import allocate_workload
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import FIG12_DENSITIES_GBIT, chip
+from repro.core.energy import dram_power
+from repro.core.rtc import Variant, evaluate
+from repro.core.workload import WorkloadProfile, from_cnn
+
+PEAK_BW = 51.2e9  # B/s — wide-interface 3D stack (Section V topology)
+
+
+def run():
+    rows = []
+    for gbit in FIG12_DENSITIES_GBIT:
+        spec = chip(gbit, peak_bw_bytes=PEAK_BW)
+        # peak-bandwidth streaming workload over the CNN working set
+        base_cnn = from_cnn(CNN_ZOO["alexnet"], fps=60)
+        w = dataclasses.replace(
+            base_cnn,
+            name=f"peakbw@{gbit}Gb",
+            read_bytes_per_iter=PEAK_BW * base_cnn.iter_period_s * 0.9,
+            write_bytes_per_iter=PEAK_BW * base_cnn.iter_period_s * 0.1,
+        )
+        baseline = dram_power(spec, w)
+        alloc = allocate_workload(
+            spec, {"data": min(w.footprint_bytes, spec.capacity_bytes)})
+        rtc = evaluate(spec, w, Variant.FULL_RTC_PLUS, alloc)
+        rows.append({
+            "density_gbit": gbit,
+            "baseline_refresh_share": baseline.refresh_fraction,
+            "rtc_refresh_share": rtc.policy.refresh / rtc.policy.total,
+        })
+    return rows
+
+
+def main():
+    rows, us = timed(run, repeat=1)
+    for r in rows:
+        emit(f"fig12_{r['density_gbit']}Gb", us / len(rows),
+             f"baseline={r['baseline_refresh_share']:.3f} "
+             f"rtc={r['rtc_refresh_share']:.3f}")
+    last = rows[-1]
+    emit("fig12_64Gb_baseline_share", us / len(rows),
+         f"{last['baseline_refresh_share']:.3f} (paper ~0.46)")
+    save_json("fig12_scaling", rows)
+
+
+if __name__ == "__main__":
+    main()

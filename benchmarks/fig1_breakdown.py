@@ -1,0 +1,39 @@
+"""Paper Fig. 1: system-level energy breakdown of three CNNs.
+
+Validates: refresh ~= 15% of system energy for AlexNet/GoogleNet and
+~= 47% for LeNet on a 2 GB-DRAM Eyeriss-class accelerator.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json, timed
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import MODULE_2GB
+from repro.core.energy import system_power
+from repro.core.workload import from_cnn
+
+PAPER_SHARES = {"alexnet": 0.15, "googlenet": 0.15, "lenet": 0.47}
+
+
+def run():
+    rows = {}
+    for name, prof in CNN_ZOO.items():
+        w = from_cnn(prof, fps=60)
+        sp = system_power(MODULE_2GB, w, prof.macs_per_frame * 60)
+        rows[name] = {
+            "refresh_share": sp["refresh_share"],
+            "dram_share": sp["dram_share"],
+            "paper_refresh_share": PAPER_SHARES[name],
+        }
+    return rows
+
+
+def main():
+    rows, us = timed(run)
+    for name, r in rows.items():
+        emit(f"fig1_{name}_refresh_share", us / len(rows),
+             f"{r['refresh_share']:.3f} (paper {r['paper_refresh_share']:.2f})")
+    save_json("fig1_breakdown", rows)
+
+
+if __name__ == "__main__":
+    main()

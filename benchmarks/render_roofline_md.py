@@ -1,0 +1,65 @@
+"""Render §Roofline markdown from the cached dry-run JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["gemma-2b", "smollm-360m", "gemma2-9b", "qwen1.5-0.5b",
+              "mixtral-8x22b", "dbrx-132b", "internvl2-1b",
+              "falcon-mamba-7b", "recurrentgemma-2b", "musicgen-medium"]
+
+
+def load(mesh="pod", tag="baseline"):
+    out = {}
+    for p in glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}__{tag}.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_t(x):
+    return f"{x*1e3:.1f}" if x >= 1e-4 else f"{x*1e3:.2f}"
+
+
+def main(mesh="pod", tag="baseline"):
+    recs = load(mesh, tag)
+    print("| arch | shape | compute ms | memory ms | coll ms | dominant "
+          "| useful | MFU bound | peak GiB | fits | knobs |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                print(f"| {arch} | {shape} | — | — | — | *(pending)* "
+                      "| | | | | |")
+                continue
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | *skip: "
+                      "full-attention @512k* | | | | | |")
+                continue
+            t = r["terms_s"]
+            o = r.get("opts", {})
+            knobs = []
+            if o.get("microbatch", 1) > 1:
+                knobs.append(f"mb{o['microbatch']}")
+            if o.get("fsdp"):
+                knobs.append("fsdp")
+            if o.get("opt_state_dtype") == "bfloat16":
+                knobs.append("bf16-mom")
+            print(
+                f"| {arch} | {shape} | {fmt_t(t['compute_s'])} "
+                f"| {fmt_t(t['memory_s'])} | {fmt_t(t['collective_s'])} "
+                f"| {r['dominant'].replace('_s','')} "
+                f"| {r['useful_compute_ratio']:.2f} "
+                f"| {r['mfu_bound']:.3f} "
+                f"| {r['peak_bytes_per_device']/2**30:.1f} "
+                f"| {'yes' if r['fits_hbm'] else '**no**'} "
+                f"| {','.join(knobs)} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,75 @@
+"""Roofline table generator (§Roofline of EXPERIMENTS.md).
+
+Reads the cached dry-run records and emits, per (arch x shape), the
+three terms, the dominant bottleneck, MODEL_FLOPS ratio, and the
+one-line "what would move the dominant term" note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+NOTES = {
+    ("compute_s", "train"): "raise per-chip work: bigger microbatch / "
+        "drop remat recompute (remat=dots) / fix head-padding idle chips",
+    ("compute_s", "prefill"): "head-padding idle chips; flash kernel "
+        "fuses the softmax pipeline on real TPUs",
+    ("compute_s", "decode"): "batch more sequences per chip",
+    ("memory_s", "train"): "cut activation re-materialization: remat=dots, "
+        "fuse CE chunks, avoid GQA K/V expansion",
+    ("memory_s", "prefill"): "avoid GQA K/V expansion; fuse attention "
+        "(flash kernel) to stop spilling score tiles",
+    ("memory_s", "decode"): "decode is KV-cache-bandwidth bound by nature: "
+        "quantize cache / widen batch to amortize weight reads",
+    ("collective_s", "train"): "reduce-scatter instead of all-reduce for "
+        "grads (ZeRO-1), overlap collectives with compute, CE label "
+        "gather via one-hot einsum",
+    ("collective_s", "prefill"): "keep activations sequence-sharded "
+        "between attention and MLP (sequence parallelism)",
+    ("collective_s", "decode"): "shard KV on heads where possible; "
+        "all-reduce only the 1-token logits",
+}
+
+
+def rows(tag: str = "baseline", mesh: str = "pod"):
+    out = []
+    for path in sorted(glob.glob(
+            os.path.join(DRYRUN_DIR, f"*__{mesh}__{tag}.json"))):
+        rec = json.load(open(path))
+        if rec.get("skipped"):
+            out.append(rec)
+            continue
+        kind = ("train" if rec["shape"].startswith("train") else
+                "prefill" if rec["shape"].startswith("prefill") else
+                "decode")
+        rec["note"] = NOTES.get((rec["dominant"], kind), "")
+        out.append(rec)
+    return out
+
+
+def main():
+    table = rows()
+    for rec in table:
+        key = f"roofline_{rec['arch']}__{rec['shape']}"
+        if rec.get("skipped"):
+            emit(key, 0.0, "skipped: " + rec["reason"][:50])
+            continue
+        t = rec["terms_s"]
+        emit(key, rec.get("compile_s", 0.0) * 1e6,
+             f"compute={t['compute_s']*1e3:.2f}ms "
+             f"memory={t['memory_s']*1e3:.2f}ms "
+             f"coll={t['collective_s']*1e3:.2f}ms "
+             f"dom={rec['dominant'].replace('_s','')} "
+             f"useful={rec['useful_compute_ratio']:.2f} "
+             f"mfu_bound={rec['mfu_bound']:.3f} "
+             f"fits={rec['fits_hbm']}")
+    save_json("roofline_table", table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark driver: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints
+``name,us_per_call,derived`` CSV rows for:
+  fig1   — system energy breakdown (refresh shares)
+  fig10  — RTC variant savings grid (RTT/PAAR/full/mid/min)
+  fig11  — RTC vs SmartRefresh
+  fig12  — refresh share vs chip density
+  fig13  — Eigenfaces / BCPNN / BFAST
+  lm_rtc — beyond-paper: RTC on the 10 assigned LM archs
+  sim    — event-level simulator cross-check (integrity + agreement)
+  roofline — dry-run roofline table (requires cached dry-run results)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _sim_crosscheck():
+    from benchmarks.common import emit, timed
+    from repro.core.dram import DRAMSpec
+    from repro.core.refresh_sim import simulate
+    from repro.core.rtc import Variant
+
+    spec = DRAMSpec(capacity_bytes=65536 * 2048)
+
+    def run():
+        r = simulate(spec, Variant.FULL_RTC, alloc_rows=16384,
+                     rows_accessed_per_window=4096, n_windows=16)
+        expected = 1.0 - (16384 - 4096) / 65536
+        return r, expected
+
+    (r, expected), us = timed(run, repeat=1)
+    emit("sim_fullrtc_vs_analytic", us,
+         f"sim={r.refresh_savings:.4f} analytic={expected:.4f} "
+         f"violations={r.violations}")
+
+
+def main() -> None:
+    from benchmarks import (fig1_breakdown, fig10_savings, fig11_smartrefresh,
+                            fig12_scaling, fig13_other_apps, lm_rtc, roofline)
+    print("name,us_per_call,derived")
+    fig1_breakdown.main()
+    fig10_savings.main()
+    fig11_smartrefresh.main()
+    fig12_scaling.main()
+    fig13_other_apps.main()
+    lm_rtc.main()
+    _sim_crosscheck()
+    try:
+        roofline.main()
+    except Exception as e:  # dry-run cache may not exist yet
+        print(f"roofline,,skipped ({e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

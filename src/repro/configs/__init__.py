@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every assigned architecture exposes ``full_config()`` (the exact
+published configuration) and ``smoke_config()`` (a reduced same-family
+config for CPU tests).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+from repro.configs import (dbrx_132b, falcon_mamba_7b, gemma2_9b, gemma_2b,
+                           internvl2_1b, mixtral_8x22b, musicgen_medium,
+                           qwen15_05b, recurrentgemma_2b, smollm_360m)
+
+_MODULES = {
+    m.ARCH: m
+    for m in (
+        gemma_2b, smollm_360m, gemma2_9b, qwen15_05b, mixtral_8x22b,
+        dbrx_132b, internvl2_1b, falcon_mamba_7b, recurrentgemma_2b,
+        musicgen_medium,
+    )
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULES)}")
+    mod = _MODULES[arch]
+    return mod.smoke_config() if smoke else mod.full_config()
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

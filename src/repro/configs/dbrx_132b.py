@@ -1,0 +1,32 @@
+"""dbrx-132b [moe] — hf: databricks/dbrx-base  [unverified tier].
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352, fine-grained
+MoE 16 experts top-4, SwiGLU, global attention.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "dbrx-132b"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="moe",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=10752, vocab_size=100352, head_dim=128,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",),
+        n_experts=16, experts_per_token=4,
+        tie_embeddings=False, rope_theta=5e5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=96, vocab_size=256, head_dim=16,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",),
+        n_experts=8, experts_per_token=4,
+        tie_embeddings=False, dtype="float32",
+    )

@@ -1,0 +1,32 @@
+"""falcon-mamba-7b [ssm] — arXiv:2410.05355 (hf: tiiuae/falcon-mamba-7b)
+[unverified tier].
+
+64L d_model=4096 attention-free Mamba-1 blocks, ssm_state=16,
+d_inner=8192 (expand 2), conv width 4, vocab=65024.  O(1) recurrent
+state => long_500k runs.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "falcon-mamba-7b"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="ssm",
+        n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=65024,
+        attn_pattern=("ssm",),
+        ssm_state=16, ssm_conv=4, ssm_expand=2,
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=256,
+        attn_pattern=("ssm",),
+        ssm_state=4, ssm_conv=4, ssm_expand=2,
+        tie_embeddings=False, dtype="float32",
+    )

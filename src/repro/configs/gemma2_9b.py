@@ -1,0 +1,37 @@
+"""gemma2-9b [dense] — arXiv:2408.00118 (hf: google/gemma-2-9b).
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000, GeGLU,
+head_dim=256, alternating local(4096)/global attention, attention-logit
+softcap 50, final-logit softcap 30.
+
+long_500k: runs — only the 21 global layers keep a full-length cache
+(alternating-local halves it) and decode cost is linear per token.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "gemma2-9b"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8,
+        d_ff=14336, vocab_size=256000, head_dim=256,
+        mlp_gated=True, mlp_activation="gelu",
+        attn_pattern=("local", "global"), window_size=4096,
+        attn_softcap=50.0, logit_softcap=30.0,
+        scale_embeddings=True, tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=256, head_dim=16,
+        mlp_gated=True, mlp_activation="gelu",
+        attn_pattern=("local", "global"), window_size=8,
+        attn_softcap=50.0, logit_softcap=30.0,
+        scale_embeddings=True, tie_embeddings=True,
+        dtype="float32",
+    )

@@ -1,0 +1,32 @@
+"""gemma-2b [dense] — arXiv:2403.08295 (hf: google/gemma-2b).
+
+18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000, GeGLU,
+head_dim=256, global attention, embeddings scaled by sqrt(d), tied head.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "gemma-2b"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+        d_ff=16384, vocab_size=256000, head_dim=256,
+        mlp_gated=True, mlp_activation="gelu",
+        attn_pattern=("global",),
+        scale_embeddings=True, tie_embeddings=True,
+        rope_theta=10000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1,
+        d_ff=128, vocab_size=256, head_dim=16,
+        mlp_gated=True, mlp_activation="gelu",
+        attn_pattern=("global",),
+        scale_embeddings=True, tie_embeddings=True,
+        dtype="float32",
+    )

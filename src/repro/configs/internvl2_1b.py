@@ -1,0 +1,34 @@
+"""internvl2-1b [vlm] — arXiv:2404.16821 (hf: OpenGVLab/InternVL2-1B).
+
+Backbone only (per assignment): the Qwen2-0.5B language model —
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655, SwiGLU,
+QKV bias.  The InternViT-300M frontend is a STUB: ``input_specs()``
+feeds precomputed patch embeddings (repro.models.frontends).
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "internvl2-1b"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="vlm",
+        n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+        d_ff=4864, vocab_size=151655, head_dim=64,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",), qkv_bias=True,
+        tie_embeddings=True, frontend="vision", frontend_tokens=1025,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=1,
+        d_ff=128, vocab_size=256, head_dim=32,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",), qkv_bias=True,
+        tie_embeddings=True, frontend="vision", frontend_tokens=16,
+        dtype="float32",
+    )

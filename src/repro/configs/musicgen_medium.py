@@ -1,0 +1,35 @@
+"""musicgen-medium [audio] — arXiv:2306.05284 (hf:
+facebook/musicgen-medium).
+
+Decoder backbone only (per assignment): 48L d_model=1536 24H (MHA
+kv=24) d_ff=6144 vocab=2048 (EnCodec codebook size), plain GELU MLP
+(non-gated), untied head.  The EnCodec/text-conditioning frontend is a
+STUB providing precomputed frame embeddings.  (Published model uses
+learned positional embeddings; we use RoPE — noted deviation, does not
+change any shape or FLOP count at the precision the roofline uses.)
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "musicgen-medium"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="audio",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab_size=2048, head_dim=64,
+        mlp_gated=False, mlp_activation="gelu",
+        attn_pattern=("global",),
+        tie_embeddings=False, frontend="audio",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="audio",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=64, head_dim=16,
+        mlp_gated=False, mlp_activation="gelu",
+        attn_pattern=("global",),
+        tie_embeddings=False, frontend="audio", dtype="float32",
+    )

@@ -1,0 +1,30 @@
+"""qwen1.5-0.5b [dense] — hf: Qwen/Qwen1.5-0.5B.
+
+24L d_model=1024 16H (MHA kv=16) d_ff=2816 vocab=151936, SwiGLU,
+QKV bias, tied embeddings.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "qwen1.5-0.5b"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=2816, vocab_size=151936, head_dim=64,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",), qkv_bias=True,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256, head_dim=16,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",), qkv_bias=True,
+        tie_embeddings=True, dtype="float32",
+    )

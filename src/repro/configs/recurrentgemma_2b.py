@@ -1,0 +1,40 @@
+"""recurrentgemma-2b [hybrid] — arXiv:2402.19427 (hf:
+google/recurrentgemma-2b).
+
+26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000, GeGLU,
+RG-LRU recurrent blocks with local attention every third layer
+(published pattern: rec,rec,attn repeating; the final two layers are
+recurrent), window 2048, head_dim=256, lru_width=2560.  Bounded state
+=> long_500k runs.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "recurrentgemma-2b"
+
+def full_config() -> ModelConfig:
+    # 26 layers = 8 x (rglru, rglru, local) + (rglru, rglru) tail —
+    # the published schedule (attention every 3rd layer, recurrent end).
+    return ModelConfig(
+        name=ARCH, family="hybrid",
+        n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1,
+        d_ff=7680, vocab_size=256000, head_dim=256,
+        mlp_gated=True, mlp_activation="gelu",
+        attn_pattern=("rglru", "rglru", "local"),
+        pattern_tail=("rglru", "rglru"), window_size=2048,
+        lru_width=2560, conv1d_width=4,
+        scale_embeddings=True, tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="hybrid",
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=1,
+        d_ff=128, vocab_size=256, head_dim=16,
+        mlp_gated=True, mlp_activation="gelu",
+        attn_pattern=("rglru", "rglru", "local"),
+        pattern_tail=("rglru", "rglru"), window_size=8,
+        lru_width=64, conv1d_width=4,
+        scale_embeddings=True, tie_embeddings=True,
+        dtype="float32",
+    )

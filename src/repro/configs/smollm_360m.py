@@ -1,0 +1,30 @@
+"""smollm-360m [dense] — hf: HuggingFaceTB/SmolLM-360M (llama arch).
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152, SwiGLU.
+Note: 15 query heads do not divide a 16-way model axis — GSPMD pads
+(baseline); the §Perf log studies the cost.
+"""
+from repro.models.config import ModelConfig
+
+ARCH = "smollm-360m"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+        d_ff=2560, vocab_size=49152, head_dim=64,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",), tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH + "-smoke", family="dense",
+        n_layers=2, d_model=60, n_heads=3, n_kv_heads=1,
+        d_ff=96, vocab_size=256, head_dim=20,
+        mlp_gated=True, mlp_activation="silu",
+        attn_pattern=("global",), tie_embeddings=True,
+        dtype="float32",
+    )

@@ -1,0 +1,167 @@
+"""Row-granular DRAM allocator.
+
+RTC reasons about DRAM at *row* granularity: PAAR (Full-RTC) refreshes
+only ``[start, end)`` row ranges holding live data (Section IV-C2's
+bound registers), Mid-RTC's bank-granular PAAR needs to know which banks
+are entirely empty (Section IV-B), and the RTT AGU iterates allocated
+regions with an affine address function (Section III-C).
+
+Two placement policies, matching the trade-off discussed in the paper:
+
+* ``pack``       — fill rows contiguously from row 0.  Maximizes the
+  number of completely-empty banks (best for Mid-RTC PAAR) and yields a
+  single tight [lo, hi) bound (best for Full-RTC PAAR).
+* ``interleave`` — stripe regions across banks for bank-level
+  parallelism / bandwidth (Section III-E maps concurrent applications to
+  disjoint banks; a bandwidth-bound single app stripes).
+
+The allocator is deliberately simple (bump allocation, no free): the
+paper's workloads allocate once per application launch, which is also
+how accelerator runtimes behave.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Tuple
+
+from repro.core.dram import DRAMSpec
+
+__all__ = ["Region", "AllocationMap", "Allocator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A named, row-aligned allocation.
+
+    ``striped`` regions are interleaved across all banks (their
+    ``start_row``/``n_rows`` describe the *logical* row span; physically
+    every bank holds a slice), which matters only for Mid-RTC bank
+    accounting.
+    """
+
+    name: str
+    start_row: int
+    n_rows: int
+    n_bytes: int
+    striped: bool = False
+
+    @property
+    def end_row(self) -> int:
+        return self.start_row + self.n_rows
+
+    def rows(self) -> range:
+        return range(self.start_row, self.end_row)
+
+
+@dataclasses.dataclass
+class AllocationMap:
+    """All live regions of one application on one module."""
+
+    spec: DRAMSpec
+    regions: Dict[str, Region] = dataclasses.field(default_factory=dict)
+
+    # ---- aggregate row accounting ----------------------------------------
+    @property
+    def allocated_rows(self) -> int:
+        return sum(r.n_rows for r in self.regions.values())
+
+    @property
+    def allocated_bytes(self) -> int:
+        return sum(r.n_bytes for r in self.regions.values())
+
+    @property
+    def allocated_fraction(self) -> float:
+        return self.allocated_rows / self.spec.n_rows
+
+    def bounds(self) -> Tuple[int, int]:
+        """Tightest [lo, hi) row bound covering all regions.
+
+        This is exactly what Full-RTC's two PAAR bound registers hold
+        (Fig. 6).  Returns (0, 0) when nothing is allocated.
+        """
+        if not self.regions:
+            return (0, 0)
+        lo = min(r.start_row for r in self.regions.values())
+        hi = max(r.end_row for r in self.regions.values())
+        return lo, hi
+
+    def rows_within_bounds(self) -> int:
+        lo, hi = self.bounds()
+        return hi - lo
+
+    # ---- bank accounting (Mid-RTC) ---------------------------------------
+    def banks_touched(self) -> int:
+        """Number of banks with >=1 allocated row (others skip refresh
+        entirely under Mid-RTC's bank-granular PAAR)."""
+        n_banks = self.spec.n_banks * self.spec.n_channels
+        rows_per_bank = self.spec.rows_per_bank
+        touched = set()
+        for r in self.regions.values():
+            if not r.n_rows:
+                continue
+            if r.striped:
+                return n_banks  # interleaved data lands in every bank
+            first = r.start_row // rows_per_bank
+            last = (r.end_row - 1) // rows_per_bank
+            touched.update(range(first, min(last, n_banks - 1) + 1))
+        return len(touched)
+
+    def bank_paar_refresh_fraction(self) -> float:
+        """Fraction of rows Mid-RTC must still refresh (whole banks)."""
+        n_banks = self.spec.n_banks * self.spec.n_channels
+        if not self.regions:
+            return 0.0
+        return self.banks_touched() / n_banks
+
+    def row_paar_refresh_fraction(self) -> float:
+        """Fraction of rows Full-RTC must still refresh ([lo, hi) bound)."""
+        return self.rows_within_bounds() / self.spec.n_rows
+
+
+class Allocator:
+    """Bump allocator over a module's row space."""
+
+    def __init__(self, spec: DRAMSpec, policy: str = "pack"):
+        if policy not in ("pack", "interleave"):
+            raise ValueError(f"unknown placement policy: {policy}")
+        self.spec = spec
+        self.policy = policy
+        self._next_row = 0
+        self.map = AllocationMap(spec=spec)
+
+    def alloc(self, name: str, n_bytes: int) -> Region:
+        if name in self.map.regions:
+            raise ValueError(f"region {name!r} already allocated")
+        if n_bytes < 0:
+            raise ValueError("negative allocation")
+        n_rows = self.spec.rows_for_bytes(n_bytes) if n_bytes else 0
+        if self._next_row + n_rows > self.spec.n_rows:
+            raise MemoryError(
+                f"OOM: {name} needs {n_rows} rows, "
+                f"{self.spec.n_rows - self._next_row} free"
+            )
+        region = Region(
+            name, self._next_row, n_rows, n_bytes,
+            striped=(self.policy == "interleave"),
+        )
+        self._next_row += n_rows
+        self.map.regions[name] = region
+        return region
+
+    def alloc_many(self, sizes: Iterable[Tuple[str, int]]) -> AllocationMap:
+        for name, n_bytes in sizes:
+            self.alloc(name, n_bytes)
+        return self.map
+
+    @property
+    def free_rows(self) -> int:
+        return self.spec.n_rows - self._next_row
+
+
+def allocate_workload(
+    spec: DRAMSpec, sizes: Dict[str, int], policy: str = "pack"
+) -> AllocationMap:
+    """Convenience: allocate all named byte sizes, return the map."""
+    alloc = Allocator(spec, policy=policy)
+    return alloc.alloc_many(sorted(sizes.items(), key=lambda kv: -kv[1]))

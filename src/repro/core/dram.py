@@ -1,0 +1,111 @@
+"""DRAM device/module model for the RTC framework.
+
+Faithful to the paper's setting (Section II-A, V): LPDDR4-class devices,
+64 ms retention, tREFI = 7.8 us (8192 refresh commands per retention
+window), 2 KiB rows, banked organization.  Capacities from 2 Gb chips up
+to 64 Gb (Fig. 12 scalability study) and module capacities of 2/4/8 GB
+(Section V).
+
+Everything here is *static geometry and timing*; energy coefficients live
+in :mod:`repro.core.energy`, policies in :mod:`repro.core.rtc`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+GiB = 1024**3
+MiB = 1024**2
+KiB = 1024
+
+
+class TempMode(enum.Enum):
+    """Operating temperature regime (Section III): retention halves >85C."""
+
+    NORMAL = "normal"      # 64 ms retention
+    EXTENDED = "extended"  # 32 ms retention (>85 C)
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMSpec:
+    """Geometry + timing of one DRAM module as seen by the controller.
+
+    The paper evaluates module capacities of 2/4/8 GB built from 2 Gb
+    chips (Section V) and chip densities of 2..64 Gb for the scalability
+    study (Fig. 12).  ``capacity_bytes`` is the *module* capacity; the
+    row is the refresh granule (all cells on a wordline replenish
+    together), so ``n_rows`` is the unit RTC reasons about.
+    """
+
+    capacity_bytes: int
+    row_bytes: int = 2 * KiB          # Section VI-B: "row size of 2048B"
+    n_banks: int = 8                  # LPDDR4: 8 banks per channel
+    n_channels: int = 2               # LPDDR4 dual channel
+    retention_s: float = 64e-3        # JEDEC: refresh every 64 ms
+    trefi_s: float = 7.8e-6           # Section III: one REF per 7.8 us
+    trfc_s: float = 280e-9            # refresh command latency
+    trc_s: float = 60e-9              # ACT..PRE row cycle
+    peak_bw_bytes: float = 25.6e9     # LPDDR4-3200 x64-equivalent module
+    temp: TempMode = TempMode.NORMAL
+
+    def __post_init__(self) -> None:
+        if self.capacity_bytes % self.row_bytes:
+            raise ValueError("capacity must be a whole number of rows")
+        if self.capacity_bytes <= 0 or self.row_bytes <= 0:
+            raise ValueError("capacity/row size must be positive")
+
+    # ---- derived geometry -------------------------------------------------
+    @property
+    def effective_retention_s(self) -> float:
+        return self.retention_s if self.temp is TempMode.NORMAL else self.retention_s / 2
+
+    @property
+    def n_rows(self) -> int:
+        """Total rows in the module == N_r of Algorithm 1 (footnote 3)."""
+        return self.capacity_bytes // self.row_bytes
+
+    @property
+    def rows_per_bank(self) -> int:
+        return self.n_rows // (self.n_banks * self.n_channels)
+
+    @property
+    def refresh_cmds_per_window(self) -> int:
+        """REF commands the controller issues per retention window."""
+        return int(round(self.effective_retention_s / self.trefi_s))
+
+    @property
+    def rows_per_refresh_cmd(self) -> int:
+        """Rows replenished in batch by a single REF command."""
+        return max(1, math.ceil(self.n_rows / self.refresh_cmds_per_window))
+
+    @property
+    def refresh_rows_per_second(self) -> float:
+        """Row-refresh rate required for integrity: N_r per retention."""
+        return self.n_rows / self.effective_retention_s
+
+    def rows_for_bytes(self, n_bytes: int) -> int:
+        return math.ceil(n_bytes / self.row_bytes)
+
+    def refresh_duty_cycle(self) -> float:
+        """Fraction of time the device is busy refreshing (perf overhead)."""
+        return (self.refresh_cmds_per_window * self.trfc_s) / self.effective_retention_s
+
+
+# Canonical module configurations used throughout the paper's evaluation.
+def module(capacity_gb: float, **kw) -> DRAMSpec:
+    return DRAMSpec(capacity_bytes=int(capacity_gb * GiB), **kw)
+
+
+MODULE_2GB = module(2)
+MODULE_4GB = module(4)
+MODULE_8GB = module(8)
+EVAL_MODULES = {"2GB": MODULE_2GB, "4GB": MODULE_4GB, "8GB": MODULE_8GB}
+
+
+def chip(density_gbit: int, **kw) -> DRAMSpec:
+    """Single-chip spec for the Fig. 12 density-scaling study (2..64 Gb)."""
+    return DRAMSpec(capacity_bytes=int(density_gbit * GiB // 8), **kw)
+
+
+FIG12_DENSITIES_GBIT = (2, 4, 8, 16, 32, 64)

@@ -1,0 +1,114 @@
+"""Workload descriptors: the phase-level memory profile RTC consumes.
+
+A :class:`WorkloadProfile` abstracts *any* application (CNN frame loop,
+LM training step, LM decode step, Eigenfaces, BCPNN, BFAST...) down to
+exactly the quantities the RTC mechanisms depend on:
+
+* ``footprint_bytes``         — live data (PAAR: rows that must refresh);
+* ``iter_period_s``           — one application iteration (frame / step);
+* ``read_bytes_per_iter`` / ``write_bytes_per_iter`` — DRAM traffic,
+  after data-locality exploitation is applied (RTT: implicit refreshes);
+* ``regular``                 — whether the pattern is AGU-expressible
+  (Section III-E: BFAST's random accesses are not; RTC is bypassed);
+* ``row_utilization``         — effective fraction of a 2 KiB row
+  transferred per activation.  Row-stationary CNN tiling streams large
+  contiguous filter/fmap blocks but splits rows across tiles; 0.5 is the
+  paper-consistent default (see energy-model calibration notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cnn_zoo import CNNProfile
+from repro.core.dram import DRAMSpec
+
+__all__ = ["WorkloadProfile", "from_cnn", "merge"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    name: str
+    footprint_bytes: int
+    iter_period_s: float
+    read_bytes_per_iter: float
+    write_bytes_per_iter: float
+    regular: bool = True
+    row_utilization: float = 0.5
+
+    @property
+    def traffic_bytes_per_s(self) -> float:
+        return (self.read_bytes_per_iter + self.write_bytes_per_iter) / self.iter_period_s
+
+    def row_activations_per_s(self, spec: DRAMSpec) -> float:
+        """ACT rate implied by the traffic under ``row_utilization``."""
+        eff_bytes_per_act = spec.row_bytes * self.row_utilization
+        return self.traffic_bytes_per_s / eff_bytes_per_act
+
+    def rows_accessed_per_window(self, spec: DRAMSpec) -> float:
+        """N_a of Algorithm 1: row activations per retention window."""
+        return self.row_activations_per_s(spec) * spec.effective_retention_s
+
+    def distinct_rows_per_window(self, spec: DRAMSpec) -> float:
+        """Distinct rows touched in a window (bounded by the footprint
+        when the iteration covers the whole working set)."""
+        covers_per_window = spec.effective_retention_s / self.iter_period_s
+        footprint_rows = spec.rows_for_bytes(self.footprint_bytes)
+        if covers_per_window >= 1.0:
+            return float(min(footprint_rows, self.rows_accessed_per_window(spec)))
+        return float(min(footprint_rows * covers_per_window,
+                         self.rows_accessed_per_window(spec)))
+
+    def scaled(self, n_instances: int) -> "WorkloadProfile":
+        """Co-run ``n`` instances (Fig. 11 multi-CNN setup)."""
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}x{n_instances}",
+            footprint_bytes=self.footprint_bytes * n_instances,
+            read_bytes_per_iter=self.read_bytes_per_iter * n_instances,
+            write_bytes_per_iter=self.write_bytes_per_iter * n_instances,
+        )
+
+
+def from_cnn(
+    profile: CNNProfile,
+    fps: float,
+    locality: float = 1.0,
+    row_utilization: float = 0.5,
+) -> WorkloadProfile:
+    """Paper Section VI: CNN at a frame rate with locality exploitation."""
+    return WorkloadProfile(
+        name=f"{profile.name}@{fps:g}fps/L{locality:.0%}",
+        footprint_bytes=profile.footprint_bytes,
+        iter_period_s=1.0 / fps,
+        read_bytes_per_iter=profile.read_bytes_per_frame / locality,
+        write_bytes_per_iter=float(profile.write_bytes_per_frame),
+        regular=True,
+        row_utilization=row_utilization,
+    )
+
+
+def merge(name: str, *workloads: WorkloadProfile) -> WorkloadProfile:
+    """Co-schedule several workloads on one module (Fig. 11).
+
+    Traffic adds; the iteration period becomes the max (the slowest
+    refresher of its own data); regular only if all parts are regular
+    (Section III-E maps apps to disjoint banks, preserving regularity —
+    we model the aggregate stream).
+    """
+    if not workloads:
+        raise ValueError("need at least one workload")
+    period = max(w.iter_period_s for w in workloads)
+    return WorkloadProfile(
+        name=name,
+        footprint_bytes=sum(w.footprint_bytes for w in workloads),
+        iter_period_s=period,
+        read_bytes_per_iter=sum(
+            w.read_bytes_per_iter * period / w.iter_period_s for w in workloads
+        ),
+        write_bytes_per_iter=sum(
+            w.write_bytes_per_iter * period / w.iter_period_s for w in workloads
+        ),
+        regular=all(w.regular for w in workloads),
+        row_utilization=min(w.row_utilization for w in workloads),
+    )

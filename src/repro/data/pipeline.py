@@ -1,0 +1,46 @@
+"""Deterministic synthetic data pipeline.
+
+Stateless by construction: ``batch_at(step)`` is a pure function of
+(seed, step), so checkpoint/restart resumes *exactly* — the
+fault-tolerance property the trainer's restart test asserts.  Batches
+are produced host-side (numpy) and placed with the train step's input
+sharding; a one-deep prefetch overlaps host generation with device
+compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SyntheticLMData"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    """Zipf-ish synthetic token stream with next-token labels."""
+
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step])
+        )
+        # Zipf-like marginal over the vocab (heavy head, long tail).
+        u = rng.random((self.batch, self.seq_len + 1))
+        toks = np.floor(
+            (self.vocab_size ** u - 1.0) / (self.vocab_size - 1.0)
+            * self.vocab_size
+        ).astype(np.int32)
+        toks = np.clip(toks, 0, self.vocab_size - 1)
+        return toks[:, :-1], toks[:, 1:]
+
+    def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,38 @@
+"""Public op: flash attention with backend dispatch.
+
+``attention(..., backend="pallas")`` runs the tiled TPU kernel
+(interpret mode on CPU); ``backend="ref"`` runs the O(s^2) jnp oracle.
+The model layer (repro.models.attention) uses its own blocked-jnp path
+for XLA lowering; on real TPU hardware this op substitutes via
+``use_kernel=True`` plumbing in the serving/training launchers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+
+__all__ = ["attention"]
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    backend: str = "ref",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if backend == "ref":
+        return mha_ref(q, k, v, causal=causal, window=window,
+                       softcap=softcap)
+    if backend == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

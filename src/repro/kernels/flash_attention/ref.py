@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Straightforward O(s^2) softmax attention with the full feature set the
+kernel supports: GQA (kv heads broadcast over query groups), causal
+masking, sliding-window masking, and Gemma-2-style attention-logit
+softcapping.  fp32 softmax accumulation regardless of input dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha_ref"]
+
+
+def mha_ref(
+    q: jnp.ndarray,           # [b, sq, h, hd]
+    k: jnp.ndarray,           # [b, skv, kvh, hd]
+    v: jnp.ndarray,           # [b, skv, kvh, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,        # absolute position of q[0] (decode/chunked)
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows -> zero output
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the Algorithm-1 schedule generator.
+
+Generates the xfer bit for a contiguous range of (1-indexed) slots via
+the closed form derived in :mod:`repro.core.rate_matching`:
+
+    xfer_i = ceil(i*na/nr) - ceil((i-1)*na/nr)
+
+with (na, nr) the gcd-reduced rates.  Division-free formulation used by
+both backends: ceil(k*na/nr) = (k*na + nr - 1) // nr.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["schedule_block_ref"]
+
+
+def schedule_block_ref(start: jnp.ndarray, length: int, na: int, nr: int):
+    """xfer bits for slots [start+1, start+length] (int32, 0/1)."""
+    i = jnp.asarray(start, jnp.int32) + 1 + jnp.arange(length, dtype=jnp.int32)
+    if nr <= na:
+        return jnp.ones((length,), jnp.int32)
+    cur = (i * na + (nr - 1)) // nr
+    prev = ((i - 1) * na + (nr - 1)) // nr
+    return (cur - prev).astype(jnp.int32)

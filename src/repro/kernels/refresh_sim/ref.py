@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the refresh-window row-state update.
+
+One retention-window step of the RTC row-state machine, vectorized over
+rows.  The Pallas kernel in ``kernel.py`` must match this bit-exactly
+(tests sweep shapes/dtypes and ``assert_allclose`` against this).
+
+Semantics (one window):
+  * rows in the wrapped access interval [acc_start, acc_start+acc_len)
+    within the allocated region [alloc_lo, alloc_hi) are *implicitly*
+    replenished by demand transfers (RTT);
+  * rows selected by the policy's explicit-refresh predicate are
+    replenished by REF;
+  * every other row ages by one window; an *allocated* row whose age
+    exceeds the retention limit (1 window) is a data-integrity
+    violation — the simulator asserts there are none for every
+    non-oracle policy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["window_update_ref"]
+
+
+def window_update_ref(
+    age: jnp.ndarray,          # [n_rows] int32: windows since last replenish
+    row_ids: jnp.ndarray,      # [n_rows] int32: absolute row indices
+    acc_start: jnp.ndarray,    # scalar int32: stream cursor (absolute row)
+    acc_len: jnp.ndarray,      # scalar int32: rows accessed this window
+    alloc_lo: jnp.ndarray,     # scalar int32
+    alloc_hi: jnp.ndarray,     # scalar int32 (exclusive)
+    ref_lo: jnp.ndarray,       # scalar int32: explicit-refresh bound lo
+    ref_hi: jnp.ndarray,       # scalar int32: explicit-refresh bound hi
+    skip_accessed: jnp.ndarray,  # scalar bool: RTT skips rows accessed now
+):
+    """Returns (new_age, implicit, explicit, violation) — the last three
+    are per-row int32 masks (summed by the caller)."""
+    alloc_span = jnp.maximum(alloc_hi - alloc_lo, 1)
+    # Access stream wraps within the allocated region.
+    rel = row_ids - alloc_lo
+    in_alloc = (row_ids >= alloc_lo) & (row_ids < alloc_hi)
+    off = jnp.mod(rel - jnp.mod(acc_start - alloc_lo, alloc_span), alloc_span)
+    accessed = in_alloc & (off < acc_len)
+
+    in_ref_bound = (row_ids >= ref_lo) & (row_ids < ref_hi)
+    explicit = in_ref_bound & jnp.where(skip_accessed, ~accessed, True)
+
+    replenished = accessed | explicit
+    new_age = jnp.where(replenished, 0, age + 1)
+    violation = in_alloc & (new_age > 1)
+    return (
+        new_age.astype(age.dtype),
+        accessed.astype(jnp.int32),
+        explicit.astype(jnp.int32),
+        violation.astype(jnp.int32),
+    )

@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# initialization.  Dry-run only — tests/benchmarks see the 1 real CPU.
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell on the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, prints
+``memory_analysis`` / ``cost_analysis``, and caches the full roofline
+record per cell under benchmarks/results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape train_4k --mesh pod --tag mb4 --microbatch 4   # hillclimb
+"""
+import argparse
+import json
+import sys
+import traceback
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.dryrun_lib import (CellOptions, result_path, run_cell,
+                                     save_result)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES_BY_NAME, runnable
+
+DEFAULT_OUT = "benchmarks/results/dryrun"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES_BY_NAME))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    # hillclimb levers
+    ap.add_argument("--remat", default="full",
+                    choices=("none", "full", "dots"))
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--seq-axis", default=None)
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--prefill-last-only", action="store_true")
+    ap.add_argument("--scan", action="store_true",
+                    help="scan-over-depth form (default for multipod)")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = (sorted(SHAPES_BY_NAME) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for mesh_tag in meshes:
+        # Single-pod cells get the exact-cost extrapolation pass; the
+        # multi-pod sweep is the compile/sharding proof only.
+        exact = (mesh_tag == "pod") and not args.scan
+        opts = CellOptions(remat=args.remat, microbatch=args.microbatch,
+                           zero1=args.zero1, seq_axis=args.seq_axis,
+                           loss_chunk=args.loss_chunk, tag=args.tag,
+                           prefill_last_only=args.prefill_last_only,
+                           exact_costs=exact)
+        mesh = make_production_mesh(multi_pod=(mesh_tag == "multipod"))
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                shape = SHAPES_BY_NAME[shape_name]
+                runs, reason = runnable(cfg, shape)
+                path = result_path(args.out, arch, shape_name, mesh_tag,
+                                   args.tag)
+                if not runs:
+                    save_result(path, {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                        "tag": args.tag, "skipped": True, "reason": reason,
+                    })
+                    print(f"[skip] {arch} x {shape_name} ({reason})")
+                    continue
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {arch} x {shape_name} x {mesh_tag}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_tag} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(cfg, shape, mesh, opts)
+                except Exception as e:  # noqa: BLE001 — report all failures
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_tag, repr(e)))
+                    continue
+                save_result(path, rec)
+                t = rec["terms_s"]
+                print(
+                    f"  ok: lower {rec['lower_s']:.1f}s compile "
+                    f"{rec['compile_s']:.1f}s | peak/dev "
+                    f"{rec['peak_bytes_per_device']/2**30:.2f} GiB "
+                    f"(fits={rec['fits_hbm']}) | compute {t['compute_s']*1e3:.2f}ms "
+                    f"memory {t['memory_s']*1e3:.2f}ms coll "
+                    f"{t['collective_s']*1e3:.2f}ms -> {rec['dominant']}",
+                    flush=True,
+                )
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nall requested cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

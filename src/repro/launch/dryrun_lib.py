@@ -1,0 +1,463 @@
+"""Dry-run library: build, lower, compile, and analyze any cell.
+
+Importable without touching device state — the CLI wrapper
+(``dryrun.py``) sets ``XLA_FLAGS`` *before* importing this module.
+
+``run_cell`` lowers the cell's computation onto the given mesh with
+ShapeDtypeStruct stand-ins (zero allocation), compiles, and extracts:
+
+* ``memory_analysis``  — per-device argument/output/temp bytes (the
+  "does it fit 16 GB v5e HBM" proof);
+* ``cost_analysis``    — per-device HLO FLOPs and bytes accessed;
+* collective traffic   — parsed from the post-SPMD HLO text: per-device
+  operand bytes of all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute, by type;
+* the three roofline terms + MODEL_FLOPS ratio (§Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+# ---- TPU v5e hardware constants (assignment-specified) --------------------
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (per-device collective bytes / this)
+HBM_BYTES = 16 * 1024**3        # v5e HBM capacity
+DEFAULT_LOSS_CHUNK = 512        # sequence-chunked CE (see build_cell)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes by op type from post-SPMD HLO."""
+    by_type: dict = {}
+    count = 0
+    largest: list = []
+    for m in _COLL_RE.finditer(hlo_text):
+        typestr, op = m.group(1), m.group(2)
+        b = _shape_bytes(typestr)
+        agg = by_type.setdefault(op, {"bytes": 0, "count": 0})
+        agg["bytes"] += b
+        agg["count"] += 1
+        count += 1
+        largest.append((b, op))
+    largest.sort(reverse=True)
+    return {
+        "total_bytes": sum(v["bytes"] for v in by_type.values()),
+        "count": count,
+        "by_type": by_type,
+        "largest": [
+            {"bytes": b, "op": op} for b, op in largest[:8]
+        ],
+    }
+
+
+@dataclasses.dataclass
+class CellOptions:
+    """Per-cell knobs — the §Perf hillclimb levers."""
+
+    remat: str = "full"           # train-cell remat policy
+    microbatch: int = 1
+    zero1: bool = False
+    seq_axis: Optional[str] = None
+    loss_chunk: Optional[int] = None
+    exact_costs: bool = True      # add the 1-group/2-group unrolled pass
+                                  # (exact linear cost extrapolation); the
+                                  # multi-pod compile proof skips it
+    unroll: bool = False          # model form for the MAIN compile
+    fsdp: Optional[bool] = None   # None = auto by full-model state size;
+                                  # resolved ONCE per cell so the small
+                                  # extrapolation models match the full
+                                  # model's sharding regime
+    opt_state_dtype: str = "float32"  # "bfloat16" = half-width moments
+    prefill_last_only: bool = False   # serve-style prefill (last-token
+                                      # logits only) — §Perf lever
+    tag: str = "baseline"
+
+
+def _policy(mesh, opts: CellOptions, cfg=None, kind: str = "train"):
+    """Cell sharding policy.  FSDP (+ZeRO-1 for train) switches on
+    automatically when TP-only state would exceed ~35% of v5e HBM —
+    the production choice for the 100B+ MoE archs."""
+    from repro.dist.sharding import ShardingPolicy
+    if opts.fsdp is not None:
+        fsdp = opts.fsdp
+    else:
+        fsdp = opts.zero1
+        if cfg is not None:
+            n = cfg.param_counts()["total"]
+            per_param = 10 if kind == "train" else 2  # bf16 (+f32 m,v)
+            msize = dict(zip(mesh.axis_names,
+                             mesh.devices.shape)).get("model", 1)
+            tp_state = n * per_param / msize
+            if tp_state > 0.35 * HBM_BYTES:
+                fsdp = True
+    return ShardingPolicy.for_mesh(
+        mesh, zero1=opts.zero1 or (fsdp and kind == "train"),
+        seq_axis=opts.seq_axis, fsdp=fsdp)
+
+
+def build_cell(cfg, shape, mesh, opts: CellOptions):
+    """Returns (jitted_fn, arg_shapes tuple) — nothing allocated."""
+    from repro.dist.sharding import ShardingPolicy  # noqa: F401
+    from repro.models.transformer import TransformerLM
+    from repro.serve.engine import build_decode_step, build_prefill_step
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import build_train_step, init_train_state
+
+    policy = _policy(mesh, opts, cfg=cfg, kind=shape.kind)
+    b, s = shape.global_batch, shape.seq_len
+    embeds_in = cfg.frontend == "vision"
+
+    if shape.kind == "train":
+        model = TransformerLM(cfg, remat=opts.remat, unroll=opts.unroll)
+        # Baseline uses sequence-chunked CE: materializing full
+        # [b, s, 256k-vocab] f32 logits plus softmax temps exceeds HBM
+        # for the gemma-family archs (27.9 GiB/dev measured), and every
+        # production LM framework chunks or fuses big-vocab CE.
+        chunk = opts.loss_chunk or DEFAULT_LOSS_CHUNK
+        if chunk and s % chunk == 0 and s > chunk:
+            model = _with_chunked_loss(model, chunk)
+        ocfg = AdamWConfig(state_dtype=opts.opt_state_dtype)
+        step, state_sh, _ = build_train_step(
+            model, ocfg, mesh, policy,
+            microbatch=opts.microbatch,
+            input_kind="embeds" if embeds_in else "tokens")
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.key(0),
+                                     opts.opt_state_dtype))
+        if embeds_in:
+            x = jax.ShapeDtypeStruct((b, s, cfg.d_model), np.float32)
+        else:
+            x = jax.ShapeDtypeStruct((b, s), np.int32)
+        y = jax.ShapeDtypeStruct((b, s), np.int32)
+        return step, (state_shapes, x, y)
+
+    model = TransformerLM(cfg, remat="none", unroll=opts.unroll)
+    if shape.kind == "prefill":
+        step, psh, _ = build_prefill_step(
+            model, mesh, policy, last_only=opts.prefill_last_only)
+        params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        if embeds_in:
+            # vlm prefill consumes stub frontend embeddings
+            def prefill_embeds(p, e):
+                logits, _ = model.apply(p, embeds=e)
+                return logits
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            e_sh = NamedSharding(mesh, P(policy.batch_spec, policy.seq_axis,
+                                         None))
+            step = jax.jit(prefill_embeds, in_shardings=(psh, e_sh))
+            x = jax.ShapeDtypeStruct((b, s, cfg.d_model), np.float32)
+        else:
+            x = jax.ShapeDtypeStruct((b, s), np.int32)
+        return step, (params, x)
+
+    if shape.kind == "decode":
+        kv_seq_axis = None
+        if shape.name == "long_500k" and any(
+                k == "global" for k in cfg.attn_pattern):
+            # single-sequence long context: shard the cache length over
+            # the whole mesh (flash-decode-style distributed attention)
+            kv_seq_axis = tuple(mesh.axis_names)
+            kv_seq_axis = tuple(a for a in kv_seq_axis)  # all axes
+        step, psh, csh = build_decode_step(
+            model, mesh, policy, batch=b, cache_len=s,
+            kv_seq_axis=kv_seq_axis)
+        params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        tok = jax.ShapeDtypeStruct((b,), np.int32)
+        pos = jax.ShapeDtypeStruct((), np.int32)
+        return step, (params, cache, tok, pos)
+
+    raise ValueError(shape.kind)
+
+
+def _with_chunked_loss(model, chunk: int):
+    """Sequence-chunked cross-entropy: never materializes the full
+    [b, s, vocab] logits (memory-term hillclimb lever for 256k-vocab
+    archs)."""
+    import jax.numpy as jnp
+
+    def chunked_loss(params, tokens=None, labels=None, embeds=None,
+                     aux_coeff: float = 0.01):
+        hidden, aux = model.hidden(params, tokens=tokens, embeds=embeds)
+        b, s, d = hidden.shape
+        assert s % chunk == 0
+        hs = hidden.reshape(b, s // chunk, chunk, d).swapaxes(0, 1)
+        ls = labels.reshape(b, s // chunk, chunk).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def body(acc, xs):
+            # rematerialized: the backward pass recomputes each chunk's
+            # logits instead of keeping every [b, chunk, vocab] f32
+            # block alive (4+ GiB/device for 256k vocabs otherwise)
+            h, l = xs
+            logits = model._unembed(params, h)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, l[..., None], axis=-1)
+            return acc + jnp.sum(nll), None
+
+        total = jnp.zeros((), jnp.float32)
+        if model.unroll:
+            # analysis form: unrolled so HloCostAnalysis counts every
+            # chunk (a scan body is visited once — see exact_costs)
+            for i in range(s // chunk):
+                total, _ = body(total, (hs[i], ls[i]))
+        else:
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                    (hs, ls))
+        return total / (b * s) + aux_coeff * aux
+
+    model.loss = chunked_loss
+    return model
+
+
+# ---------------------------------------------------------------------------
+# Analysis
+# ---------------------------------------------------------------------------
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    n_active = cfg.active_param_counts()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def analyze(compiled, cfg, shape, n_devices: int) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    peak = (mem["argument_bytes"] + mem["output_bytes"]
+            + mem["temp_bytes"] - mem["alias_bytes"])
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS_BF16,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll["total_bytes"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / n_devices
+    return {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collectives": coll,
+        "memory": mem,
+        "peak_bytes_per_device": int(peak),
+        "fits_hbm": bool(peak <= HBM_BYTES),
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "model_flops_per_device": mf_dev,
+        "useful_compute_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "mfu_bound": (mf_dev / PEAK_FLOPS_BF16) / max(terms.values())
+        if max(terms.values()) > 0 else 0.0,
+    }
+
+
+def _compile_once(cfg, shape, mesh, opts: CellOptions):
+    t0 = time.time()
+    with mesh:
+        fn, args = build_cell(cfg, shape, mesh, opts)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+    return compiled, t_lower, t_compile
+
+
+def _raw_costs(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "coll_count": float(coll["count"]),
+        "coll": coll,
+    }
+
+
+def exact_costs(cfg, shape, mesh, opts: CellOptions) -> dict:
+    """Exact per-step HLO costs via linear group extrapolation.
+
+    XLA's HloCostAnalysis visits a while-loop body once regardless of
+    trip count (verified in tests), so the scan-form numbers undercount
+    depth.  Per-group cost is identical across groups, so with G groups:
+
+        cost(G) = cost(1 group) + (G-1) * [cost(2 groups) - cost(1)]
+
+    computed from two small *unrolled* compiles — exact for every
+    quantity linear in depth (FLOPs, bytes, collective bytes/counts),
+    with embed/loss/optimizer outer costs counted exactly once.
+    """
+    g_total = cfg.n_groups
+    o = dataclasses.replace(opts, exact_costs=False, unroll=True)
+    tail = len(cfg.pattern_tail)
+    cfg1 = dataclasses.replace(cfg, n_layers=cfg.pattern_period + tail)
+    c1_compiled, _, t1 = _compile_once(cfg1, shape, mesh, o)
+    c1 = _raw_costs(c1_compiled)
+    if g_total == 1:
+        return {"flops": c1["flops"], "bytes": c1["bytes"],
+                "coll_bytes": c1["coll_bytes"],
+                "coll_count": c1["coll_count"],
+                "coll_by_type": c1["coll"]["by_type"],
+                "largest": c1["coll"]["largest"],
+                "extrapolated_from": [1], "extra_compile_s": t1}
+    cfg2 = dataclasses.replace(cfg, n_layers=2 * cfg.pattern_period + tail)
+    c2_compiled, _, t2 = _compile_once(cfg2, shape, mesh, o)
+    c2 = _raw_costs(c2_compiled)
+
+    def lin(a, b):
+        return a + (g_total - 1) * (b - a)
+
+    by_type = {}
+    for op in set(c1["coll"]["by_type"]) | set(c2["coll"]["by_type"]):
+        b1 = c1["coll"]["by_type"].get(op, {"bytes": 0, "count": 0})
+        b2 = c2["coll"]["by_type"].get(op, {"bytes": 0, "count": 0})
+        by_type[op] = {"bytes": int(lin(b1["bytes"], b2["bytes"])),
+                       "count": int(lin(b1["count"], b2["count"]))}
+    return {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "coll_bytes": lin(c1["coll_bytes"], c2["coll_bytes"]),
+        "coll_count": lin(c1["coll_count"], c2["coll_count"]),
+        "coll_by_type": by_type,
+        "largest": c2["coll"]["largest"],
+        "extrapolated_from": [1, 2],
+        "extra_compile_s": t1 + t2,
+    }
+
+
+def run_cell(cfg, shape, mesh, opts: CellOptions) -> dict:
+    # Resolve the FSDP regime from the FULL model once, so the
+    # small extrapolation models compile under the same sharding.
+    if opts.fsdp is None:
+        pol = _policy(mesh, opts, cfg=cfg, kind=shape.kind)
+        opts = dataclasses.replace(opts, fsdp=pol.fsdp)
+    # Pass 1 — deployment (scan) form: memory analysis + compile proof.
+    # Train cells auto-scale gradient-accumulation microbatching until
+    # the step fits HBM (the knob any production config would turn);
+    # the microbatch used is recorded in the cell options.
+    compiled, t_lower, t_compile = _compile_once(cfg, shape, mesh, opts)
+    rec = analyze(compiled, cfg, shape, mesh.size)
+    if shape.kind == "train" and not rec["fits_hbm"]:
+        ladders = [dict(microbatch=mb) for mb in (2, 4, 8, 16)]
+        # final rung: bf16 optimizer moments (100B-class squeeze)
+        ladders += [dict(microbatch=mb, opt_state_dtype="bfloat16")
+                    for mb in (8, 16)]
+        for knobs in ladders:
+            if shape.global_batch % knobs["microbatch"]:
+                continue
+            opts = dataclasses.replace(opts, **knobs)
+            compiled, t_lower, t_compile = _compile_once(
+                cfg, shape, mesh, opts)
+            rec = analyze(compiled, cfg, shape, mesh.size)
+            if rec["fits_hbm"]:
+                break
+    rec["scan_form_costs"] = {
+        "flops_per_device": rec["flops_per_device"],
+        "bytes_per_device": rec["bytes_per_device"],
+        "note": "while-bodies counted once; see exact costs",
+    }
+    # Pass 2 — exact linear-extrapolated costs (single-pod analysis).
+    if opts.exact_costs:
+        ec = exact_costs(cfg, shape, mesh, opts)
+        rec["flops_per_device"] = ec["flops"]
+        rec["bytes_per_device"] = ec["bytes"]
+        rec["collectives"] = {
+            "total_bytes": ec["coll_bytes"],
+            "count": ec["coll_count"],
+            "by_type": ec["coll_by_type"],
+            "largest": ec["largest"],
+            "extrapolated_from": ec["extrapolated_from"],
+        }
+        rec["exact_cost_compile_s"] = ec["extra_compile_s"]
+        terms = {
+            "compute_s": ec["flops"] / PEAK_FLOPS_BF16,
+            "memory_s": ec["bytes"] / HBM_BW,
+            "collective_s": ec["coll_bytes"] / ICI_BW,
+        }
+        rec["terms_s"] = terms
+        rec["dominant"] = max(terms, key=terms.get)
+        mf_dev = rec["model_flops_per_device"]
+        rec["useful_compute_ratio"] = (mf_dev / ec["flops"]
+                                       if ec["flops"] else 0.0)
+        rec["step_time_bound_s"] = max(terms.values())
+        rec["mfu_bound"] = ((mf_dev / PEAK_FLOPS_BF16) / max(terms.values())
+                            if max(terms.values()) > 0 else 0.0)
+    rec.update({
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
+        "n_devices": int(mesh.size),
+        "tag": opts.tag,
+        "opts": dataclasses.asdict(opts),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    })
+    return rec
+
+
+def result_path(out_dir: str, arch: str, shape: str, mesh_tag: str,
+                tag: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_tag}__{tag}.json")
+
+
+def save_result(path: str, rec: dict):
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)

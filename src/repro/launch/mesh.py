@@ -1,0 +1,46 @@
+"""Production meshes.
+
+Exposed as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its
+first jax import, while smoke tests and benchmarks see the 1 real CPU
+device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU v5e production topology: 16x16 (256 chips) per pod; the
+    multi-pod mesh adds a leading 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
+              devices=None) -> Mesh:
+    """Mesh over the first prod(shape) available devices.
+
+    Unlike ``jax.make_mesh`` this tolerates a surplus of devices (the
+    dry-run holds 512 host devices but the single-pod mesh uses 256).
+    """
+    n = int(np.prod(shape))
+    devices = list(devices or jax.devices())
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def mesh_axes(mesh: Mesh):
+    """(data_axes, model_axis) for a production mesh."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in names if a in ("pod", "data"))
+    return data_axes, "model"

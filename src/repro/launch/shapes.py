@@ -1,0 +1,57 @@
+"""Assigned input shapes and the (arch x shape) cell gating.
+
+Four LM shapes per architecture (seq_len x global_batch):
+  * train_4k     — training step       (4,096 x 256)
+  * prefill_32k  — inference prefill   (32,768 x 32)
+  * decode_32k   — one decode step against a 32,768-token KV cache x 128
+  * long_500k    — one decode step against a 524,288-token context x 1
+                   (sub-quadratic archs only; pure full-attention archs
+                   skip per the assignment — the skip matrix lives in
+                   DESIGN.md §5 and is encoded by ``runnable`` below)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "runnable", "cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def runnable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, Optional[str]]:
+    """(runs?, skip-reason).  long_500k needs a bounded or sub-quadratic
+    per-layer state: any recurrence or window qualifies; pure
+    full-attention stacks (every layer 'global') skip."""
+    if shape.name == "long_500k":
+        if all(k == "global" for k in cfg.attn_pattern):
+            return False, ("pure full-attention arch: 512k dense KV cache "
+                           "with no windowing mechanism in the published "
+                           "architecture (assignment skip rule)")
+    return True, None
+
+
+def cells(configs: dict):
+    """Yield (arch, cfg, shape, runs, reason) for the full 40-cell grid."""
+    for arch, cfg in configs.items():
+        for shape in SHAPES:
+            runs, reason = runnable(cfg, shape)
+            yield arch, cfg, shape, runs, reason

@@ -1,0 +1,215 @@
+"""Attention: GQA/MQA/MHA, causal + sliding-window, softcap, QKV bias.
+
+``attend_full`` is the reference path used for training/prefill and for
+the dry-run (on a real TPU the Pallas flash kernel in
+``repro.kernels.flash_attention`` substitutes via ``use_kernel=True``;
+both are validated against each other in the kernel test sweep).
+``decode_attend`` consumes a KV cache for single-token decoding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axisenv import constrain, current_env
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rope, softcap
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "KVCache", "init_kv_cache"]
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, k * hd), dtype),
+        "wv": dense_init(ks[2], (d, k * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p |= {"bq": jnp.zeros((h * hd,), dtype),
+              "bk": jnp.zeros((k * hd,), dtype),
+              "bv": jnp.zeros((k * hd,), dtype)}
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _mask(s_q: int, s_kv: int, offset, local_window: Optional[int]):
+    """Causal (+ optional sliding window) mask. offset = kv_len - q_len."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_kv)[None, :]
+    m = kj <= qi
+    if local_window is not None:
+        m &= kj > qi - local_window
+    return m
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: [b,sq,h,hd]; k,v: [b,skv,kvh,hd] — grouped-query attention.
+
+    K/V are expanded to the full query-head count so the whole
+    computation shards cleanly on the head axis ("M"); the explicit
+    constraints prevent GSPMD from replicating the O(s^2) score tensor
+    across the GQA head reshape (which it otherwise does — see the
+    §Perf log entry on the first smollm dry-run).  The Pallas flash
+    kernel performs the same computation without materializing the
+    expanded K/V on real TPUs.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # Heads shard on the model axis even when h < axis (GSPMD pads; the
+    # idle-device cost shows up in the roofline and is a per-arch §Perf
+    # note).  Leaving attention unconstrained lets GSPMD replicate the
+    # O(s^2) score tensors — measured 3x worse peak memory on smollm.
+    q = constrain(q, "B", None, "M", None)
+    k = constrain(k, "B", None, "M", None)
+    v = constrain(v, "B", None, "M", None)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    logits = constrain(logits, "B", "M", None, None)
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", w.astype(v.dtype), v)
+    return out.reshape(b, sq, h * hd)
+
+
+# Query-block size for the chunked (flash-style) path; sequences at or
+# below 2*QBLOCK use the direct path.
+QBLOCK = 1024
+
+
+def attn_apply(params, cfg: ModelConfig, x, positions, kind: str):
+    """Full-sequence attention (train / prefill).
+
+    Long sequences use a *blocked* computation: query blocks are
+    processed against only their causally (and window-) reachable key
+    range with static slice bounds, so the materialized score tensor is
+    O(s * QBLOCK) instead of O(s^2) and no FLOPs are spent on fully
+    masked blocks — the pure-JAX mirror of the Pallas flash kernel's
+    tiling (which substitutes on real TPUs).
+    """
+    q, k, v = _project_qkv(params, cfg, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window_size if kind == "local" else None
+    s = x.shape[1]
+    if s <= 2 * QBLOCK or s % QBLOCK:
+        mask = _mask(s, s, 0, window)
+        out = _sdpa(q, k, v, mask, cfg)
+    else:
+        outs = []
+        for qb in range(s // QBLOCK):
+            qs, qe = qb * QBLOCK, (qb + 1) * QBLOCK
+            if window is not None:
+                ks = max(0, ((qs - window) // QBLOCK) * QBLOCK)
+            else:
+                ks = 0
+            kslice = k[:, ks:qe]
+            vslice = v[:, ks:qe]
+            mask = _mask(QBLOCK, qe - ks, qs - ks, window)
+            outs.append(_sdpa(q[:, qs:qe], kslice, vslice, mask, cfg))
+        out = jnp.concatenate(outs, axis=1)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # [b, cache_len, kv_heads, head_dim]
+    v: jnp.ndarray
+    length: jnp.ndarray   # [] int32 — tokens currently valid
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (batch, cache_len, kvh, hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
+    """One-token decode. x: [b, 1, d]; pos: [] int32 absolute position.
+
+    ``local`` layers use the cache as a ring buffer of ``window_size``
+    slots; ``global`` layers append at ``pos``.
+    """
+    q, k_new, v_new = _project_qkv(params, cfg, x)
+    posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+
+    cache_len = cache.k.shape[1]
+    # cache_len == window_size for local layers (ring buffer), == max_len
+    # for global layers (plain append, since pos < max_len).
+    slot = pos % cache_len
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+
+    kv_pos = _cache_positions(cache_len, pos)
+    valid = kv_pos >= 0
+    if kind == "local" and cfg.window_size is not None:
+        valid &= kv_pos > pos - cfg.window_size
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    scale = hd ** -0.5
+    g = cfg.n_heads // kvh
+    # Cache sharding choice (mirrors serve.engine.cache_specs): enough
+    # KV heads to fill the model axis -> shard heads; otherwise shard
+    # the cache *length* (flash-decode-style distributed attention with
+    # a GSPMD all-reduce over the softmax stats).  The grouped einsum
+    # keeps the cache unexpanded: decode is cache-bandwidth-bound and
+    # repeating K/V g-fold would inflate the memory roofline term.
+    env = current_env()
+    msize = env.size("M") if env else None
+    if env is not None and env.seq is not None:
+        kv_tags = ("B", "S", None, None)       # long-context: shard length
+    elif msize and kvh % msize == 0:
+        kv_tags = ("B", None, "M", None)       # enough heads: shard heads
+    else:
+        kv_tags = ("B", "M", None, None)       # few heads: shard length on M
+    k = constrain(k, *kv_tags)
+    v = constrain(v, *kv_tags)
+    qh = q.reshape(b, 1, kvh, g, hd)
+    # RoPE for cached keys was applied at insert time; kv cache stores
+    # post-rope keys, so attend directly.
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, k).astype(jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v).reshape(b, 1, -1)
+    new_cache = KVCache(k, v, jnp.minimum(pos + 1, cache_len).astype(jnp.int32))
+    return out @ params["wo"], new_cache
+
+
+def _cache_positions(cache_len: int, pos):
+    """Absolute position stored in each ring slot (-1 if empty).
+
+    Slot s holds the newest absolute position p <= pos with p % L == s.
+    """
+    slots = jnp.arange(cache_len)
+    cur_slot = pos % cache_len
+    newest = pos - ((cur_slot - slots) % cache_len)
+    return jnp.where(newest >= 0, newest, -1)

@@ -1,0 +1,39 @@
+"""Modality frontend STUBS for the [vlm]/[audio] architectures.
+
+Per the assignment, these entries specify the transformer BACKBONE
+only; the modality frontend provides *precomputed* patch/frame
+embeddings through ``input_specs()``.  The stubs below define the
+embedding geometry (so shapes/shardings are exact) and a deterministic
+synthetic generator for smoke tests / examples.
+
+  * ``vision`` — InternViT-300M patch embeddings projected to the
+    backbone width: 1025 tokens (32x32 patches + CLS) per image tile.
+  * ``audio``  — EnCodec frame embeddings (4 codebooks summed) at
+    50 Hz: the token stream itself for MusicGen's decoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["frontend_tokens", "synth_embeddings"]
+
+VISION_TOKENS = 1025   # 448x448 image, 14px patches, pixel-shuffle /2 + CLS
+AUDIO_FRAME_HZ = 50
+
+
+def frontend_tokens(cfg: ModelConfig) -> int:
+    """Prompt positions occupied by frontend embeddings."""
+    if cfg.frontend == "vision":
+        return VISION_TOKENS
+    if cfg.frontend == "audio":
+        return 0  # MusicGen conditions via a (stubbed) prefix, not extra tokens
+    return 0
+
+
+def synth_embeddings(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Deterministic synthetic frontend output: [batch, seq, d_model]."""
+    key = jax.random.fold_in(jax.random.key(seed), batch * 131 + seq)
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32) * 0.02

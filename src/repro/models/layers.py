@@ -1,0 +1,101 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+Hand-rolled functional style: every layer is ``init(key, cfg) ->
+params`` + ``apply(params, x) -> y`` over plain dict pytrees, which
+keeps the sharding rules (``repro.dist.sharding``) a simple map over
+param-tree paths and avoids any framework dependency.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axisenv import constrain
+
+__all__ = [
+    "dense_init", "rmsnorm_init", "rmsnorm", "mlp_init", "mlp_apply",
+    "rope", "softcap", "embed_init",
+]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (the zoo's default)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU or plain)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, d_ff), dtype),
+         "wo": dense_init(ks[1], (d_ff, d), dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = constrain(x @ params["wi"], "B", None, "M")
+    if "wg" in params:
+        h = act(constrain(x @ params["wg"], "B", None, "M")) * h
+    else:
+        h = act(h)
+    return constrain(h @ params["wo"], "B", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (jnp.tanh(x / cap) * cap).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"tok": dense_init(key, (vocab, d), dtype, scale=1.0)}

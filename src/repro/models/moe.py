@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: top-k routing, group-wise capacity dispatch.
+
+Dispatch is **group-wise per batch element**: each sequence ranks its
+own tokens into per-expert capacity slices and scatters into its own
+buffer row.  Every scatter/gather is then local to the (data-sharded)
+batch dimension — GSPMD never has to all-reduce a dispatch buffer (the
+naive global scatter materialized full multi-GiB expert buffers per
+device on the 100B MoE train cells).  Expert compute is a batched
+einsum ``becd,edf->becf`` whose b (data) and e (model) dims are plain
+batch dims, so the sharding survives the backward pass cleanly.
+
+Capacity: per sequence, ``max(1, cf * k * seq / e)``; overflow tokens
+within a sequence drop (standard dropping MoE; decode's seq=1 never
+drops since each virtual expert receives at most one routing slot).
+
+Virtual expert split (``cfg.moe_virtual_split = s``): each expert is
+stored/computed as ``s`` experts of width ``d_ff/s`` — exact for gated
+MLPs (f-slices independent through the activation, wo row-blocks sum)
+and chosen so the expert count divides the production model axis
+(mixtral: 8 x 2 -> 16).  A Switch-style load-balance aux loss is
+computed on the real experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axisenv import constrain, current_env
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = cfg.moe_virtual_split
+    if f % s:
+        raise ValueError("d_ff must divide moe_virtual_split")
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "wi": dense_init(ks[1], (e * s, d, f // s), dtype),
+        "wo": dense_init(ks[2], (e * s, f // s, d), dtype),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = dense_init(ks[3], (e * s, d, f // s), dtype)
+    return p
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """x: [b, seq, d] -> (y: [b, seq, d], aux_loss: scalar f32)."""
+    b, seq, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    vs = cfg.moe_virtual_split
+
+    logits = x.astype(jnp.float32) @ params["router"]            # [b,seq,e]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # [b,seq,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    aux = _aux_loss(probs.reshape(-1, e), expert_idx.reshape(-1, k), e)
+
+    # --- virtual expert split (layout-only; see module docstring) --------
+    if vs > 1:
+        e = e * vs
+        k = k * vs
+        expert_idx = (expert_idx[..., None] * vs
+                      + jnp.arange(vs)[None, None, None, :]
+                      ).reshape(b, seq, k)
+        gate_vals = jnp.repeat(gate_vals, vs, axis=-1)
+
+    capacity = max(1, int(cfg.moe_capacity_factor * k * seq / e)) \
+        if seq > 1 else k
+    nk = seq * k
+
+    # --- per-sequence rank within expert ---------------------------------
+    flat_idx = expert_idx.reshape(b, nk)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)        # [b,nk,e]
+    ranks = jnp.cumsum(onehot, axis=1) - onehot                  # exclusive
+    pos = jnp.sum(ranks * onehot, axis=-1)                       # [b,nk]
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_idx * capacity + pos, e * capacity)
+
+    # --- dispatch: local scatter per batch element --------------------------
+    src = jnp.broadcast_to(x[:, :, None, :], (b, seq, k, d)
+                           ).reshape(b, nk, d)
+
+    def scatter_one(src_b, slot_b):
+        buf = jnp.zeros((e * capacity + 1, d), x.dtype)
+        return buf.at[slot_b].add(src_b)
+
+    buf = jax.vmap(scatter_one)(src, slot)[:, :-1, :]            # [b,e*c,d]
+    xin = constrain(buf.reshape(b, e, capacity, d),
+                    "B", _etag(e), None, None)
+
+    # --- expert computation (b, e are batch dims: stays local) -------------
+    h = constrain(jnp.einsum("becd,edf->becf", xin, params["wi"]),
+                  "B", _etag(e), None, None)
+    if "wg" in params:
+        act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.mlp_activation]
+        h = act(constrain(jnp.einsum("becd,edf->becf", xin, params["wg"]),
+                          "B", _etag(e), None, None)) * h
+    else:
+        h = jax.nn.silu(h)
+    yout = jnp.einsum("becf,efd->becd", h, params["wo"])
+    yout = constrain(yout, "B", _etag(e), None, None)
+    yout = yout.reshape(b, e * capacity, d)
+
+    # --- combine: local gather per batch element, gate-weighted -------------
+    zero_row = jnp.zeros((b, 1, d), yout.dtype)
+    yext = jnp.concatenate([yout, zero_row], axis=1)
+    gathered = jnp.take_along_axis(
+        yext, slot[..., None].astype(jnp.int32), axis=1)         # [b,nk,d]
+    gathered = constrain(gathered, "B", None, None)
+    w = (gate_vals.reshape(b, nk) * keep).astype(gathered.dtype)
+    y = jnp.sum(gathered.reshape(b, seq, k, d)
+                * w.reshape(b, seq, k)[..., None], axis=2)
+    return y, aux
+
+
+def _etag(e):
+    env = current_env()
+    msize = env.size("M") if env else None
+    return "M" if (msize and e % msize == 0) else None
+
+
+def _aux_loss(probs, expert_idx, e):
+    """Switch-style load-balance loss (on the REAL experts)."""
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    mean_probs = jnp.mean(probs, axis=0)
+    return (e * jnp.sum(density * mean_probs)).astype(jnp.float32)

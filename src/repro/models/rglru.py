@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma-2b / Griffin).
+
+Griffin's recurrent block: parallel (x, gate) projections; temporal
+conv1d on x; Real-Gated LRU
+
+    r_t = sigmoid(W_a y_t + b_a)         (recurrence gate)
+    i_t = sigmoid(W_x y_t + b_x)         (input gate)
+    a_t = exp(c * softplus(L_a) * r_t * log(a_base))  -> a_t = a^(c r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+then h is gated by GeLU(gate) and projected out.  The linear recurrence
+is diagonal, so train/prefill uses ``associative_scan`` over the
+sequence (state [b, s, lru_width] — no state blowup) and decode is an
+O(1) update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axisenv import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "RGLRUCache",
+           "init_rglru_cache"]
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, dl = cfg.d_model, cfg.resolved_lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, dl), dtype),
+        "wgate": dense_init(ks[1], (d, dl), dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv1d_width, dl), dtype, scale=0.5),
+        "conv_b": jnp.zeros((dl,), dtype),
+        "w_a": dense_init(ks[3], (dl, dl), dtype),
+        "b_a": jnp.zeros((dl,), dtype),
+        "w_i": dense_init(ks[4], (dl, dl), dtype),
+        "b_i": jnp.zeros((dl,), dtype),
+        # a_base in (0.9, 0.999): parametrized via softplus-logit
+        "a_param": jnp.full((dl,), 0.7, jnp.float32),
+        "out_proj": dense_init(ks[5], (dl, d), dtype),
+    }
+
+
+def _gates(params, y):
+    r = jax.nn.sigmoid(y @ params["w_a"] + params["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(y @ params["w_i"] + params["b_i"]).astype(jnp.float32)
+    log_a_base = -_C * jax.nn.softplus(params["a_param"])  # < 0
+    a = jnp.exp(log_a_base * r)                            # in (0, 1)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    x_in = beta * (i * y.astype(jnp.float32))
+    return a, x_in
+
+
+def _conv1d(params, x, state=None):
+    k = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * params["conv_w"][i] for i in range(k)
+    ) + params["conv_b"]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return out, new_state
+
+
+def rglru_apply(params, cfg: ModelConfig, x):
+    """Full-sequence recurrent block. x: [b, s, d] -> [b, s, d]."""
+    y = constrain(x @ params["wx"], "B", None, "M")
+    gate = constrain(x @ params["wgate"], "B", None, "M")
+    y, _ = _conv1d(params, y)
+    a, x_in = _gates(params, y)
+
+    def combine(e1, e2):
+        a1, h1 = e1
+        a2, h2 = e2
+        return a2 * a1, a2 * h1 + h2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    out = h.astype(x.dtype) * jax.nn.gelu(gate)
+    return out @ params["out_proj"]
+
+
+class RGLRUCache(NamedTuple):
+    conv: jnp.ndarray   # [b, k-1, dl]
+    h: jnp.ndarray      # [b, dl] f32
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    dl = cfg.resolved_lru_width
+    return RGLRUCache(
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, dl), dtype),
+        h=jnp.zeros((batch, dl), jnp.float32),
+    )
+
+
+def rglru_decode(params, cfg: ModelConfig, x, cache: RGLRUCache
+                 ) -> Tuple[jnp.ndarray, RGLRUCache]:
+    """One-token decode. x: [b, 1, d]."""
+    y = x @ params["wx"]
+    gate = x @ params["wgate"]
+    y, conv_state = _conv1d(params, y, cache.conv)
+    a, x_in = _gates(params, y)
+    h = a[:, 0] * cache.h + x_in[:, 0]
+    out = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)
+    return out @ params["out_proj"], RGLRUCache(conv=conv_state, h=h)

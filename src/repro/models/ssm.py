@@ -1,0 +1,149 @@
+"""Mamba-1 selective state-space block (falcon-mamba-7b).
+
+Faithful Mamba-1 structure: in_proj -> (x, z); depthwise causal conv1d;
+input-dependent (selective) Delta/B/C; diagonal SSM scan
+``h_t = exp(Delta*A) h_{t-1} + Delta*B x_t``, ``y = C.h + D x``;
+SiLU-gated output projection.
+
+Scan strategy (TPU-adapted, see DESIGN.md):
+  * train/prefill — ``lax.scan`` over sequence *chunks*, with a
+    parallel ``associative_scan`` inside each chunk: the materialized
+    state tensor is [b, chunk, d_inner, ssm_state] instead of the
+    O(seq) full tensor, trading O(seq/chunk) sequential steps for a
+    VMEM/HBM-feasible working set.
+  * decode — O(1) recurrence on the carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axisenv import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "SSMCache", "init_ssm_cache"]
+
+CHUNK = 128  # sequence chunk for the hybrid scan
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, nst, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A (negative real spectrum).
+    a_init = jnp.tile(jnp.arange(1, nst + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, r + 2 * nst), dtype),
+        "dt_proj": dense_init(ks[3], (r, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(~0.01)
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _ssm_inner(params, cfg: ModelConfig, xc, h0):
+    """One chunk of the selective scan.
+
+    xc: [b, c, di] conv+silu output; h0: [b, di, n] carried state.
+    Returns (y: [b, c, di], h: [b, di, n]).
+    """
+    b, c, di = xc.shape
+    nst = cfg.ssm_state
+    r = cfg.resolved_dt_rank
+    dbc = xc @ params["x_proj"]                                  # [b,c,r+2n]
+    dt = jax.nn.softplus(
+        dbc[..., :r] @ params["dt_proj"] + params["dt_bias"]
+    ).astype(jnp.float32)                                        # [b,c,di]
+    B = dbc[..., r:r + nst].astype(jnp.float32)                  # [b,c,n]
+    C = dbc[..., r + nst:].astype(jnp.float32)                   # [b,c,n]
+    A = -jnp.exp(params["A_log"])                                # [di,n]
+
+    a = jnp.exp(dt[..., None] * A)                               # [b,c,di,n]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * B[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    # Fold the carried state into the first element, then parallel-scan.
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+    acc_a, acc_b = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = jnp.einsum("bcdn,bcn->bcd", acc_b, C)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    return y.astype(xc.dtype), acc_b[:, -1]
+
+
+def _conv1d(params, x, state=None):
+    """Depthwise causal conv. x: [b, s, di]; state: [b, k-1, di] or None."""
+    k = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * params["conv_w"][i] for i in range(k)
+    ) + params["conv_b"]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return out, new_state
+
+
+def ssm_apply(params, cfg: ModelConfig, x):
+    """Full-sequence Mamba block. x: [b, s, d] -> [b, s, d]."""
+    b, s, d = x.shape
+    di = cfg.d_inner
+    xz = constrain(x @ params["in_proj"], "B", None, "M")
+    xin, z = xz[..., :di], xz[..., di:]
+    xc, _ = _conv1d(params, xin)
+    xc = jax.nn.silu(xc)
+
+    chunk = min(CHUNK, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not a multiple of chunk {chunk}")
+    xcs = xc.reshape(b, s // chunk, chunk, di).swapaxes(0, 1)
+
+    def step(h, xchunk):
+        y, h_next = _ssm_inner(params, cfg, xchunk, h)
+        return h_next, y
+
+    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xcs)
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # [b, k-1, di]
+    h: jnp.ndarray      # [b, di, n] f32
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di = cfg.d_inner
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        h=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    )
+
+
+def ssm_decode(params, cfg: ModelConfig, x, cache: SSMCache
+               ) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token decode. x: [b, 1, d]."""
+    di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = _conv1d(params, xin, cache.conv)
+    xc = jax.nn.silu(xc)
+    y, h = _ssm_inner(params, cfg, xc, cache.h)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], SSMCache(conv=conv_state, h=h)

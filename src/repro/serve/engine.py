@@ -1,0 +1,169 @@
+"""Serving: sharded prefill/decode step builders + a batched engine.
+
+``build_prefill_step`` / ``build_decode_step`` produce the exact
+computations the inference dry-run shapes lower (`prefill_32k` lowers
+the full-sequence forward; `decode_32k` / `long_500k` lower ONE decode
+step against a materialized KV cache, per the assignment).
+
+Cache sharding: batch on the data axes, heads/state channels on
+``model``; for single-sequence long-context (`long_500k`, batch=1) the
+policy's ``kv_seq_axis`` shards the cache *length* instead, which GSPMD
+turns into flash-decode-style distributed attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.axisenv import axis_env
+from repro.dist.sharding import ShardingPolicy, param_specs
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+
+__all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
+           "ServeEngine"]
+
+
+def cache_specs(model: TransformerLM, batch: int, cache_len: int,
+                policy: ShardingPolicy, kv_seq_axis=None,
+                model_axis_size: Optional[int] = None):
+    """PartitionSpec tree matching ``model.init_cache(batch, cache_len)``.
+
+    KV placement mirrors ``attention.attn_decode``: shard heads on the
+    model axis when there are enough KV heads to fill it, otherwise
+    shard the cache length (flash-decode).  ``kv_seq_axis`` overrides
+    (long_500k shards the length over the whole mesh).
+    """
+    cfg = model.cfg
+    b = policy.batch_spec if batch > 1 else None
+    m = policy.model_axis
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+    heads_fit = (model_axis_size is not None and cfg.n_kv_heads > 0
+                 and cfg.n_kv_heads % model_axis_size == 0)
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "name", getattr(path[-1], "key", "")))
+        nd = len(leaf.shape)
+        # "groups" caches carry a leading stacked-group axis; "tail"
+        # caches (pattern remainder layers) do not.
+        top = str(getattr(path[0], "key", ""))
+        lead = (None,) if top == "groups" else ()
+        if name in ("k", "v"):            # [(G,) B, L, KV, hd]
+            if kv_seq_axis is not None:
+                return P(*lead, b, kv_seq_axis, None, None)
+            if heads_fit:
+                return P(*lead, b, None, m, None)
+            return P(*lead, b, m, None, None)
+        if name == "length":
+            return P(*([None] * nd))
+        if name == "conv":                 # [(G,) B, k-1, width]
+            return P(*lead, b, None, m)
+        if name == "h":
+            if nd == len(lead) + 3:        # ssm: [(G,) B, di, n]
+                return P(*lead, b, m, None)
+            return P(*lead, b, m)          # rglru: [(G,) B, dl]
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def build_prefill_step(model: TransformerLM, mesh: Mesh,
+                       policy: ShardingPolicy, donate: bool = False,
+                       last_only: bool = True):
+    """Full-sequence forward with sharded params/batch.
+
+    ``last_only`` (production default): unembed only the final position
+    — serving prefill needs the first sampled token, not [b, s, vocab]
+    logits (4.2 GiB/device of pure output for gemma2-9b @32k).
+    """
+    pspecs = param_specs(jax.eval_shape(
+        lambda: model.init(jax.random.key(0))), policy)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(mesh, P(policy.batch_spec, policy.seq_axis))
+
+    def prefill(params, tokens):
+        with axis_env(policy, mesh=mesh):
+            if last_only:
+                hidden, _ = model.hidden(params, tokens=tokens)
+                return model._unembed(params, hidden[:, -1:])
+            logits, _ = model.apply(params, tokens=tokens)
+            return logits
+
+    return jax.jit(prefill, in_shardings=(psh, tok_sh)), psh, tok_sh
+
+
+def build_decode_step(model: TransformerLM, mesh: Mesh,
+                      policy: ShardingPolicy, batch: int, cache_len: int,
+                      kv_seq_axis=None):
+    """One-token decode with sharded KV cache. Returns
+    (step_fn, param_shardings, cache_shardings)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = param_specs(jax.eval_shape(
+        lambda: model.init(jax.random.key(0))), policy)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    cspecs = cache_specs(model, batch, cache_len, policy, kv_seq_axis,
+                         model_axis_size=sizes.get(policy.model_axis))
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(
+        mesh, P(policy.batch_spec if batch > 1 else None))
+
+    def decode(params, cache, token, pos):
+        seq_override = kv_seq_axis if kv_seq_axis is not None else policy.seq_axis
+        with axis_env(batch_axes=policy.data_axes if batch > 1 else None,
+                      model_axis=policy.model_axis,
+                      seq_axis=seq_override, mesh=mesh):
+            return model.decode_step(params, cache, token, pos)
+
+    step = jax.jit(
+        decode,
+        in_shardings=(psh, csh, tok_sh, NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(
+            policy.batch_spec if batch > 1 else None, None)), csh),
+        donate_argnums=(1,),
+    )
+    return step, psh, csh
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Minimal batched serving loop (example / integration tests)."""
+
+    model: TransformerLM
+    params: dict
+    max_len: int = 256
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """prompts: [b, prompt_len] int32 -> [b, n_new] int32."""
+        b, plen = prompts.shape
+        cache = self.model.init_cache(b, self.max_len)
+        decode = jax.jit(self.model.decode_step)
+        tok = None
+        # prefill token-by-token through the decode path (engine-level
+        # simplicity; the sharded builders above lower true prefill).
+        for t in range(plen):
+            logits, cache = decode(self.params, cache,
+                                   jnp.asarray(prompts[:, t]), jnp.asarray(t))
+        out = []
+        key = jax.random.key(seed)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            logits, cache = decode(self.params, cache, tok,
+                                   jnp.asarray(plen + i))
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits / temperature, axis=-1).astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return np.stack(out, axis=1)

@@ -1,0 +1,101 @@
+"""AdamW + LR schedules + global-norm clipping (self-contained).
+
+Optimizer state shards exactly like the parameters (the spec tree is
+``tree_map``-broadcast), so model-sharded tensors get sharded moments
+for free; with ``ShardingPolicy.zero1`` the train step additionally
+scatters DP-replicated moments across the data axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # Moment storage dtype.  "bfloat16" halves optimizer-state memory
+    # (update math stays f32); the standard squeeze for 100B-class
+    # models on 16 GB/chip parts.
+    state_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray   # [] int32
+    mu: dict            # first moment  (f32, shards like params)
+    nu: dict            # second moment (f32, shards like params)
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> OptState:
+    if isinstance(state_dtype, str):
+        state_dtype = {"float32": jnp.float32,
+                       "bfloat16": jnp.bfloat16}[state_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, state: OptState
+) -> Tuple[dict, OptState]:
+    lr = cosine_schedule(cfg)(state.step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    t = (state.step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        sdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m.astype(sdt), v.astype(sdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=state.step + 1, mu=new_m, nu=new_v)

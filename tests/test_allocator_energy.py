@@ -1,0 +1,124 @@
+"""Allocator + DRAM geometry + energy model units/properties."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import Allocator, allocate_workload
+from repro.core.dram import DRAMSpec, MODULE_2GB, MODULE_8GB, TempMode, chip
+from repro.core.energy import DEFAULT_PARAMS, dram_power
+from repro.core.workload import WorkloadProfile, from_cnn, merge
+from repro.core.cnn_zoo import CNN_ZOO, cnn_profile
+
+
+# ---------------------------------------------------------------------------
+# DRAM geometry
+# ---------------------------------------------------------------------------
+def test_paper_row_count_consistency():
+    """Section VI-B: an 8 GB module with 2048 B rows has 4,194,304 rows
+    (the paper's SmartRefresh counter count)."""
+    assert MODULE_8GB.n_rows == 4_194_304
+
+
+def test_refresh_cadence():
+    spec = MODULE_2GB
+    assert spec.refresh_cmds_per_window == round(64e-3 / 7.8e-6)
+    assert spec.rows_per_refresh_cmd * spec.refresh_cmds_per_window >= spec.n_rows
+
+
+def test_extended_temperature_halves_retention():
+    hot = DRAMSpec(capacity_bytes=MODULE_2GB.capacity_bytes,
+                   temp=TempMode.EXTENDED)
+    assert hot.effective_retention_s == MODULE_2GB.effective_retention_s / 2
+    assert hot.refresh_rows_per_second == 2 * MODULE_2GB.refresh_rows_per_second
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+def test_alloc_bounds_and_banks():
+    alloc = Allocator(MODULE_2GB, policy="pack")
+    alloc.alloc("w", 10 << 20)
+    alloc.alloc("act", 1 << 20)
+    m = alloc.map
+    lo, hi = m.bounds()
+    assert lo == 0 and hi == m.allocated_rows
+    assert m.row_paar_refresh_fraction() == pytest.approx(
+        m.allocated_rows / MODULE_2GB.n_rows)
+    assert m.banks_touched() == 1  # packed: one bank suffices
+
+
+def test_interleave_touches_all_banks():
+    alloc = Allocator(MODULE_2GB, policy="interleave")
+    alloc.alloc("w", 10 << 20)
+    assert alloc.map.banks_touched() == \
+        MODULE_2GB.n_banks * MODULE_2GB.n_channels
+
+
+def test_alloc_oom():
+    alloc = Allocator(MODULE_2GB)
+    with pytest.raises(MemoryError):
+        alloc.alloc("too-big", MODULE_2GB.capacity_bytes + 1)
+
+
+@given(st.lists(st.integers(1, 50 << 20), min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_alloc_regions_disjoint(sizes):
+    alloc = Allocator(MODULE_8GB)
+    for i, s in enumerate(sizes):
+        alloc.alloc(f"r{i}", s)
+    regions = sorted(alloc.map.regions.values(), key=lambda r: r.start_row)
+    for a, b in zip(regions, regions[1:]):
+        assert a.end_row <= b.start_row
+    assert alloc.map.allocated_bytes == sum(sizes)
+
+
+# ---------------------------------------------------------------------------
+# Energy model
+# ---------------------------------------------------------------------------
+def test_refresh_power_scales_with_capacity():
+    w = from_cnn(CNN_ZOO["alexnet"], 60)
+    p2 = dram_power(MODULE_2GB, w)
+    p8 = dram_power(MODULE_8GB, w)
+    assert p8.refresh == pytest.approx(4 * p2.refresh, rel=1e-6)
+    assert p8.io == pytest.approx(p2.io, rel=1e-6)  # traffic unchanged
+
+
+def test_refresh_dominates_idle_small_footprint():
+    """LeNet-style: refresh must dominate DRAM energy (>90%)."""
+    w = from_cnn(CNN_ZOO["lenet"], 60)
+    p = dram_power(MODULE_2GB, w)
+    assert p.refresh_fraction > 0.9
+
+
+@given(st.floats(0.25, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_locality_scales_reads(loc):
+    prof = cnn_profile("alexnet")
+    w1 = from_cnn(prof, 60, locality=1.0)
+    w2 = from_cnn(prof, 60, locality=loc)
+    assert w2.read_bytes_per_iter == pytest.approx(
+        w1.read_bytes_per_iter / loc, rel=1e-9)
+
+
+def test_merge_traffic_adds():
+    a = from_cnn(CNN_ZOO["alexnet"], 60)
+    l = from_cnn(CNN_ZOO["lenet"], 60)
+    m = merge("mix", a, l)
+    assert m.footprint_bytes == a.footprint_bytes + l.footprint_bytes
+    assert m.traffic_bytes_per_s == pytest.approx(
+        a.traffic_bytes_per_s + l.traffic_bytes_per_s, rel=1e-9)
+
+
+def test_lenet_footprint_anchor():
+    """Section III-D: LeNet footprint ~1.06 MB at 100x100 input."""
+    assert 0.9e6 <= CNN_ZOO["lenet"].footprint_bytes <= 1.2e6
+
+
+def test_alexnet_row_coverage_anchor():
+    """AN@60fps touches ~44% of a 2 GB module's rows per retention
+    window (the Fig. 10a RTT operating point)."""
+    w = from_cnn(CNN_ZOO["alexnet"], 60)
+    frac = w.rows_accessed_per_window(MODULE_2GB) / MODULE_2GB.n_rows
+    assert 0.80 <= frac <= 1.0  # near rate-matched, as the paper says

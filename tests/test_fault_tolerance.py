@@ -1,0 +1,115 @@
+"""Fault tolerance: exact restart, atomic checkpoints, preemption,
+elastic re-mesh (CPU-scale integration tests of the production paths)."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLMData
+from repro.dist.sharding import ShardingPolicy
+from repro.launch.mesh import make_mesh
+from repro.models.transformer import TransformerLM
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer
+
+
+def _mk_trainer(tmp_path, ckpt_every=5, seed=0):
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    model = TransformerLM(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    policy = ShardingPolicy.for_mesh(mesh)
+    data = SyntheticLMData(cfg.vocab_size, batch=4, seq_len=16, seed=seed)
+    return Trainer(model, AdamWConfig(lr=1e-3, total_steps=100), mesh,
+                   policy, data, ckpt_dir=str(tmp_path),
+                   ckpt_every=ckpt_every, seed=seed)
+
+
+def test_loss_decreases(tmp_path):
+    t = _mk_trainer(tmp_path)
+    report = t.run(12)
+    assert report.losses[-1] < report.losses[0]
+    assert np.isfinite(report.losses).all()
+
+
+def test_exact_restart_reproduces_trajectory(tmp_path):
+    """Killed-and-restarted training == uninterrupted training, bit for
+    bit: stateless data + full-state checkpoints."""
+    full = _mk_trainer(tmp_path / "a").run(10).losses
+
+    t1 = _mk_trainer(tmp_path / "b", ckpt_every=5)
+    first = t1.run(5)             # checkpoints at step 5, then "dies"
+    t2 = _mk_trainer(tmp_path / "b", ckpt_every=5)  # fresh process
+    second = t2.run(5)
+    assert second.resumed_from == 5
+    resumed = first.losses + second.losses
+    np.testing.assert_allclose(resumed, full, rtol=0, atol=0)
+
+
+def test_checkpoint_atomicity_on_partial_write(tmp_path):
+    """A leftover .tmp directory from a crashed writer is never picked
+    up as the latest step."""
+    t = _mk_trainer(tmp_path, ckpt_every=5)
+    t.run(5)
+    os.makedirs(tmp_path / "step_00000099.tmp")
+    assert store.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    t = _mk_trainer(tmp_path, ckpt_every=5)
+    t.run(5)
+    # flip bytes in the array file
+    path = tmp_path / "step_00000005" / "arrays.npz"
+    raw = bytearray(path.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    path.write_bytes(bytes(raw))
+    t2 = _mk_trainer(tmp_path)
+    with pytest.raises(Exception):
+        t2.run(1)
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    t = _mk_trainer(tmp_path, ckpt_every=100)
+    t._flag_preempt()
+    report = t.run(10)
+    assert report.preempted and report.steps_run == 1
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_remesh_restore(tmp_path):
+    """A checkpoint taken on one mesh restores onto a different mesh
+    (restore reshards onto the new target shardings)."""
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    model = TransformerLM(cfg)
+    data = SyntheticLMData(cfg.vocab_size, batch=4, seq_len=16)
+
+    mesh1 = make_mesh((1, 1), ("data", "model"))
+    t1 = Trainer(model, AdamWConfig(total_steps=100), mesh1,
+                 ShardingPolicy.for_mesh(mesh1), data,
+                 ckpt_dir=str(tmp_path), ckpt_every=3)
+    losses1 = t1.run(3).losses
+
+    # "scale" to a new mesh (still 1 device on CPU, but a fresh mesh and
+    # freshly-built sharded step) and resume
+    mesh2 = make_mesh((1, 1), ("data", "model"))
+    t2 = Trainer(model, AdamWConfig(total_steps=100), mesh2,
+                 ShardingPolicy.for_mesh(mesh2), data,
+                 ckpt_dir=str(tmp_path), ckpt_every=3)
+    rep2 = t2.run(2)
+    assert rep2.resumed_from == 3
+    assert np.isfinite(rep2.losses).all()
+
+
+def test_data_pipeline_deterministic():
+    d = SyntheticLMData(1000, batch=4, seq_len=8, seed=7)
+    a1, b1 = d.batch_at(13)
+    a2, b2 = d.batch_at(13)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1, b2)
+    a3, _ = d.batch_at(14)
+    assert not np.array_equal(a1, a3)
+    # labels are next-token shifted
+    full_a, full_b = d.batch_at(0)
+    np.testing.assert_array_equal(full_a[:, 1:], full_b[:, :-1])

@@ -1,0 +1,91 @@
+"""Algorithm 1 (RTT rate matching): unit + property tests.
+
+The schedule has a clean arithmetic characterization (Euclidean rhythm);
+hypothesis sweeps (N_a, N_r) and cross-checks all four implementations
+(reference / lax.scan / closed form / Pallas kernel) plus the paper's
+worked example (Fig. 5).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.rate_matching import (coalesced_access_fraction,
+                                      implicit_fraction, period,
+                                      ratematch_closed, ratematch_ref,
+                                      ratematch_scan, schedule_stats)
+from repro.kernels.rate_match.ops import schedule_bits
+
+
+def test_paper_fig5_example():
+    # N_a = 2, N_r = 4: alternate implicit / explicit (Fig. 5)
+    assert ratematch_ref(2, 4) == [1, 0]
+
+
+def test_matched_rates_all_implicit():
+    assert ratematch_ref(7, 7) == [1]
+    assert ratematch_ref(9, 3) == [1]
+
+
+def test_zero_access_all_explicit():
+    assert ratematch_ref(0, 5) == [0]
+    assert period(0, 5) == 1
+
+
+@given(st.integers(0, 500), st.integers(1, 500))
+@settings(max_examples=200, deadline=None)
+def test_implementations_agree(n_a, n_r):
+    p = period(n_a, n_r)
+    ref = ratematch_ref(n_a, n_r)
+    scan = np.asarray(ratematch_scan(n_a, n_r, p)).tolist()
+    closed = np.asarray(
+        ratematch_closed(np.arange(1, p + 1), n_a, n_r)).tolist()
+    pallas = np.asarray(schedule_bits(n_a, n_r, p)).tolist()
+    assert ref == scan == closed == pallas
+
+
+@given(st.integers(1, 400), st.integers(1, 400))
+@settings(max_examples=150, deadline=None)
+def test_density_is_exact(n_a, n_r):
+    """Over one period, implicit slots == reduced N_a (when N_a < N_r):
+    the schedule realizes exactly the implicit fraction min(1, Na/Nr)."""
+    p, ones, zeros = schedule_stats(n_a, n_r)
+    assert ones + zeros == p
+    assert abs(ones / p - implicit_fraction(n_a, n_r)) < 1e-12
+
+
+@given(st.integers(1, 300), st.integers(1, 300))
+@settings(max_examples=100, deadline=None)
+def test_no_starvation(n_a, n_r):
+    """Explicit refreshes are spread (Bresenham property): within any
+    window of ceil(P/zeros)+1 slots there is at least one explicit
+    refresh when N_a < N_r — no row waits two periods."""
+    if n_a >= n_r:
+        return
+    bits = ratematch_ref(n_a, n_r)
+    p = len(bits)
+    zeros = bits.count(0)
+    if zeros == 0:
+        return
+    max_gap = -(-p // zeros) + 1
+    doubled = bits + bits
+    run = 0
+    for b in doubled:
+        if b == 1:
+            run += 1
+            assert run <= max_gap
+        else:
+            run = 0
+
+
+@given(st.integers(0, 10_000_000), st.integers(1, 10_000_000))
+@settings(max_examples=50, deadline=None)
+def test_module_scale_rates(n_a, n_r):
+    """Fractions behave at real module scales (4M+ rows) without
+    overflow (closed form uses int64 host math)."""
+    f = implicit_fraction(n_a, n_r)
+    x = coalesced_access_fraction(n_a, n_r)
+    assert 0.0 <= f <= 1.0 and 0.0 <= x <= 1.0
+    i = np.arange(1, 101)
+    bits = np.asarray(ratematch_closed(i, n_a, n_r))
+    assert set(np.unique(bits)).issubset({0, 1})
