@@ -1,0 +1,14 @@
+"""sys.path setup for directly-invoked benchmark scripts.
+
+``python benchmarks/<script>.py`` puts only ``benchmarks/`` on
+``sys.path``; importing this module (guarded by ``if __package__ in
+(None, "")`` in each script) prepends the repo root and ``src/`` so
+``benchmarks.*`` and ``repro.*`` resolve without ``-m`` + PYTHONPATH.
+"""
+import os
+import sys
+
+_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_root, "src"), _root):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

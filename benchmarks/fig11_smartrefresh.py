@@ -7,6 +7,9 @@ to ~96% (LeNet-only) more DRAM energy than SmartRefresh.
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 from benchmarks.common import emit, save_json, timed
 from repro.core.allocator import allocate_workload
 from repro.core.cnn_zoo import CNN_ZOO

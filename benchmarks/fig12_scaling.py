@@ -7,6 +7,9 @@ while RTC-enabled DRAM nearly eliminates it for CNN-style workloads
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 import dataclasses
 
 from benchmarks.common import emit, save_json, timed

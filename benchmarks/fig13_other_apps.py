@@ -10,6 +10,9 @@ Per Section VI-E:
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 from benchmarks.common import emit, save_json, timed
 from repro.core.allocator import allocate_workload
 from repro.core.dram import GiB, MODULE_8GB, module

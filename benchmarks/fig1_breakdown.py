@@ -5,6 +5,9 @@ Validates: refresh ~= 15% of system energy for AlexNet/GoogleNet and
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 from benchmarks.common import emit, save_json, timed
 from repro.core.cnn_zoo import CNN_ZOO
 from repro.core.dram import MODULE_2GB

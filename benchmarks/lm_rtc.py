@@ -10,6 +10,9 @@ bound when cached, else a 50 tok/s serving assumption.
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 import glob
 import json
 import os

@@ -6,6 +6,9 @@ one-line "what would move the dominant term" note.
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 import glob
 import json
 import os

@@ -13,6 +13,9 @@
 """
 from __future__ import annotations
 
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
 import sys
 
 

@@ -1,0 +1,184 @@
+"""Static placement: ShardingPolicy + parameter/batch PartitionSpecs.
+
+``param_specs`` is a pure map over parameter-tree *paths and shapes*
+(it runs happily on ``jax.eval_shape`` output), so the placement of a
+100B-parameter model is decided without allocating a byte.  The rule
+table lives in the package docstring (:mod:`repro.dist`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "param_specs", "batch_specs"]
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Names the mesh axes and the sharding regime for one launch.
+
+    ``mesh_axis_sizes`` carries the mesh extents so shape-dependent
+    rules (MoE expert-parallel vs tensor-parallel, FSDP divisibility)
+    can be decided without a live mesh.  An empty tuple means "sizes
+    unknown": the MoE expert-parallel check passes optimistically
+    (a wrong guess only costs efficiency), but FSDP/ZeRO-1 scatter is
+    SKIPPED — pjit argument shardings do not pad, so a data-axis shard
+    is only placed on a provably divisible dim.  Build policies with
+    :meth:`for_mesh` to get both.
+    """
+
+    mesh_axis_sizes: Tuple[Tuple[str, int], ...] = ()
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    seq_axis: Axes = None
+    fsdp: bool = False
+    zero1: bool = False
+    # FSDP/ZeRO-1 only scatter tensors with at least this many elements
+    # — sharding small norms/biases buys nothing and costs a gather.
+    fsdp_min_size: int = 1 << 20
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, *, seq_axis: Axes = None,
+                 fsdp: bool = False, zero1: bool = False,
+                 **overrides) -> "ShardingPolicy":
+        names = tuple(mesh.axis_names)
+        sizes = tuple(zip(names, (int(s) for s in mesh.devices.shape)))
+        data = tuple(a for a in names if a in ("pod", "data")) or names[:1]
+        model = "model" if "model" in names else names[-1]
+        return cls(mesh_axis_sizes=sizes, data_axes=data, model_axis=model,
+                   seq_axis=seq_axis, fsdp=fsdp, zero1=zero1, **overrides)
+
+    # ---- axis arithmetic ---------------------------------------------------
+    @property
+    def batch_spec(self) -> Axes:
+        """PartitionSpec entry for a batch dimension."""
+        if len(self.data_axes) == 1:
+            return self.data_axes[0]
+        return tuple(self.data_axes)
+
+    def axis_size(self, name: str) -> Optional[int]:
+        return dict(self.mesh_axis_sizes).get(name)
+
+    @property
+    def model_size(self) -> Optional[int]:
+        return self.axis_size(self.model_axis)
+
+    @property
+    def data_size(self) -> Optional[int]:
+        n = 1
+        for a in self.data_axes:
+            s = self.axis_size(a)
+            if s is None:
+                return None
+            n *= s
+        return n
+
+
+def _key(entry) -> str:
+    """Stringify one pytree path entry (DictKey/SequenceKey/GetAttrKey)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _add_fsdp(spec: P, shape: Tuple[int, ...], policy: ShardingPolicy,
+              skip_dim0: bool = True) -> P:
+    """Shard one free, data-divisible dim of a large tensor over the
+    data axes.  ``skip_dim0`` protects the stacked group (scan) dim of
+    block parameters; ZeRO-1 passes False for flat optimizer moments."""
+    n = 1
+    for s in shape:
+        n *= int(s)
+    if n < policy.fsdp_min_size:
+        return spec
+    dsize = policy.data_size
+    if not dsize:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if any(a in used for a in policy.data_axes):
+        return spec
+    for dim in range(1 if skip_dim0 else 0, len(shape)):
+        if entries[dim] is None and shape[dim] % dsize == 0:
+            entries[dim] = policy.batch_spec
+            return P(*entries)
+    return spec
+
+
+def param_specs(shapes, policy: Optional[ShardingPolicy] = None):
+    """PartitionSpec pytree for a TransformerLM parameter (shape) tree.
+
+    See the rule table in the :mod:`repro.dist` docstring.  Parameters
+    under ``"blocks"`` are stacked over scan groups and keep their
+    leading dim unsharded; ``"tail"`` layers are unstacked.
+    """
+    policy = policy or ShardingPolicy()
+    m = policy.model_axis
+
+    def one(path, leaf):
+        keys = [_key(e) for e in path]
+        top, name = keys[0], keys[-1]
+        mod = keys[-2] if len(keys) >= 2 else ""
+        nd = len(leaf.shape)
+        lead = (None,) if top == "blocks" else ()
+        spec = None
+        if top == "embed":                       # tok [V, d]
+            spec = P(m, None)
+        elif top == "lm_head":                   # [d, V]
+            spec = P(None, m)
+        elif mod == "attn":
+            if name in ("wq", "wk", "wv"):       # [d, heads*hd]
+                spec = P(*lead, None, m)
+            elif name == "wo":                   # [heads*hd, d]
+                spec = P(*lead, m, None)
+            elif name in ("bq", "bk", "bv"):     # [heads*hd]
+                spec = P(*lead, m)
+        elif mod == "mlp":
+            if name in ("wi", "wg"):             # [d, ff]
+                spec = P(*lead, None, m)
+            elif name == "wo":                   # [ff, d]
+                spec = P(*lead, m, None)
+        elif mod == "moe":
+            if name in ("wi", "wg", "wo"):       # [E, d, f] / [E, f, d]
+                n_storage_experts = leaf.shape[len(lead)]
+                msize = policy.model_size
+                expert_parallel = (msize is None
+                                   or n_storage_experts % msize == 0)
+                if expert_parallel:
+                    spec = P(*lead, m, None, None)
+                elif name == "wo":
+                    spec = P(*lead, None, m, None)
+                else:
+                    spec = P(*lead, None, None, m)
+        elif mod == "ssm":
+            if name == "in_proj":                # [d, 2*di]
+                spec = P(*lead, None, m)
+            elif name == "out_proj":             # [di, d]
+                spec = P(*lead, m, None)
+        elif mod == "rec":
+            if name in ("wx", "wgate", "w_a", "w_i"):   # [d|dl, dl]
+                spec = P(*lead, None, m)
+            elif name == "out_proj":             # [dl, d]
+                spec = P(*lead, m, None)
+        if spec is None:
+            spec = P(*([None] * nd))
+        if policy.fsdp:
+            spec = _add_fsdp(spec, tuple(leaf.shape), policy,
+                             skip_dim0=(top == "blocks"))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def batch_specs(policy: ShardingPolicy) -> Tuple[P, P]:
+    """(token_spec, label_spec) for [batch, seq] training inputs."""
+    spec = P(policy.batch_spec, policy.seq_axis)
+    return spec, spec

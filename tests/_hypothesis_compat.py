@@ -1,0 +1,102 @@
+"""Hypothesis compatibility shim.
+
+Test modules import ``given`` / ``settings`` / ``strategies`` from
+here instead of from ``hypothesis`` directly.  When the real package
+is installed (the ``[test]`` extra), it is used unchanged; otherwise a
+minimal fallback runs each property as a **fixed deterministic example
+sweep**: boundary values first, then draws from a seed-0 PRNG, capped
+at ``min(max_examples, 50)`` examples.  No shrinking, no database —
+just enough to keep the properties exercised on hermetic CPU runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies
+except ImportError:
+    import random
+    import types
+
+    _MAX_EXAMPLES_CAP = 50
+
+    class _Strategy:
+        """A draw function plus explicit boundary examples."""
+
+        def __init__(self, draw, edges=()):
+            self.draw = draw
+            self.edges = tuple(edges)
+
+        def example(self, rng, i):
+            if i < len(self.edges):
+                return self.edges[i]
+            return self.draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         edges=(min_value, max_value))
+
+    def _floats(min_value, max_value, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         edges=(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5,
+                         edges=(False, True))
+
+    def _just(value):
+        return _Strategy(lambda rng: value, edges=(value,))
+
+    def _sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                         edges=(seq[0], seq[-1]))
+
+    def _lists(elements, min_size=0, max_size=10, **_):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _builds(target, **kwargs):
+        def draw(rng):
+            return target(**{k: s.draw(rng) for k, s in kwargs.items()})
+        return _Strategy(draw)
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, floats=_floats, booleans=_booleans,
+        just=_just, sampled_from=_sampled_from, lists=_lists,
+        builds=_builds,
+    )
+
+    def settings(max_examples=None, **_):
+        """Records max_examples on the function; other knobs ignored."""
+        def deco(fn):
+            if max_examples is not None:
+                fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_compat_max_examples", 10),
+                    _MAX_EXAMPLES_CAP)
+
+            # Deliberately NOT functools.wraps: the wrapper must expose
+            # a zero-arg signature so pytest doesn't treat the property
+            # arguments as fixtures.
+            def wrapper():
+                rng = random.Random(0)
+                for i in range(n):
+                    args = [s.example(rng, i) for s in arg_strategies]
+                    kwargs = {k: s.example(rng, i)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "strategies"]

@@ -2,8 +2,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core.allocator import Allocator, allocate_workload
 from repro.core.dram import DRAMSpec, MODULE_2GB, MODULE_8GB, TempMode, chip

@@ -1,0 +1,67 @@
+"""Regression pin for the Fig. 10 savings grid (benchmarks/fig10_savings).
+
+Two layers of assertion on the per-CNN **full-RTC DRAM energy
+savings** at 2 GB / locality 1.0 (the Fig. 10a column):
+
+* a tight pin (±0.02) on the CURRENT calibration, so silent drift in
+  the energy/allocator models is caught by CI;
+* a documented band around the paper's text-anchored values where the
+  paper states one (Section VI: AlexNet@60fps ~44% via RTT, LeNet ~96%
+  via PAAR).  GoogLeNet and the 30 fps AlexNet point have no numeric
+  text anchor; they are pinned to calibration only.
+
+The benchmark's printed refresh-savings *range* currently spans
+0.01..1.00 against the paper's quoted 25%..96% — the low end comes
+from min-RTC at large capacities (savings shrink with capacity, as the
+paper notes), the high end from full-RTC eliminating every refresh of
+a fully re-accessed allocation.  The per-CNN pins below are the
+calibration-sensitive quantities.
+"""
+import pytest
+
+from repro.core.allocator import allocate_workload
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import EVAL_MODULES
+from repro.core.rtc import Variant, evaluate, rtt_paar_split
+from repro.core.workload import from_cnn
+
+# (cnn, fps) -> (current calibration, paper Fig. 10 anchor or None)
+EXPECTED_FULL_RTC_2GB = {
+    ("alexnet", 30): (0.551, None),
+    ("alexnet", 60): (0.426, 0.44),
+    ("lenet", 30): (0.973, 0.96),
+    ("lenet", 60): (0.971, 0.96),
+    ("googlenet", 30): (0.834, None),
+    ("googlenet", 60): (0.741, None),
+}
+CALIBRATION_TOL = 0.02
+PAPER_TOL = 0.05
+
+
+def _full_rtc(cnn: str, fps: int):
+    spec = EVAL_MODULES["2GB"]
+    w = from_cnn(CNN_ZOO[cnn], fps, locality=1.0)
+    alloc = allocate_workload(spec, {"data": w.footprint_bytes})
+    rep = evaluate(spec, w, Variant.FULL_RTC, alloc)
+    rtt, paar = rtt_paar_split(spec, w, alloc)
+    return rep.dram_savings, rtt, paar
+
+
+@pytest.mark.parametrize("cnn,fps", sorted(EXPECTED_FULL_RTC_2GB))
+def test_full_rtc_savings_pinned(cnn, fps):
+    got, _, _ = _full_rtc(cnn, fps)
+    current, paper = EXPECTED_FULL_RTC_2GB[(cnn, fps)]
+    assert got == pytest.approx(current, abs=CALIBRATION_TOL), (
+        f"{cnn}@{fps}fps full-RTC drifted from the pinned calibration: "
+        f"{got:.3f} vs {current:.3f}")
+    if paper is not None:
+        assert got == pytest.approx(paper, abs=PAPER_TOL), (
+            f"{cnn}@{fps}fps full-RTC left the paper's Fig. 10 band: "
+            f"{got:.3f} vs paper {paper:.2f}")
+
+
+@pytest.mark.parametrize("cnn,fps", sorted(EXPECTED_FULL_RTC_2GB))
+def test_full_rtc_is_max_of_rtt_paar(cnn, fps):
+    """Paper: full-RTC picks the better of RTT and PAAR per workload."""
+    got, rtt, paar = _full_rtc(cnn, fps)
+    assert got == pytest.approx(max(rtt, paar), abs=1e-6)

@@ -7,8 +7,8 @@ worked example (Fig. 5).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core.rate_matching import (coalesced_access_fraction,
                                       implicit_fraction, period,

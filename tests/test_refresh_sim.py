@@ -1,7 +1,7 @@
 """Event-level simulator: integrity invariant + analytic cross-check."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core.dram import DRAMSpec
 from repro.core.refresh_sim import simulate

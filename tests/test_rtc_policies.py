@@ -1,7 +1,7 @@
 """RTC policy engine: paper-anchor validation + property tests."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core.allocator import allocate_workload
 from repro.core.cnn_zoo import CNN_ZOO
