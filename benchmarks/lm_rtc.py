@@ -1,30 +1,43 @@
 """Beyond-paper: RTC energy savings for the 10 assigned LM architectures.
 
-Applies the paper's mechanism to modern LM steps (edge-serving regime:
-weights resident in LPDDR-class memory).  Decode steps re-stream the
-*active* weights every few ms — far above the refresh rate — so RTT is
-ideal for dense archs, while MoE archs leave inactive experts untouched
-(the Algorithm-1 partial-coverage regime) and small archs on big
-modules lean on PAAR.  Step periods come from the dry-run roofline
-bound when cached, else a 50 tok/s serving assumption.
+Applies the paper's mechanism to modern LM serving (edge regime:
+weights resident in LPDDR-class memory).  The DRAM profile is no longer
+hand-built: the continuous-batching :class:`repro.serve.ServeEngine`
+serves a mixed-prompt-length request trace (smoke-scale model — the
+*scheduling* is what is measured) and its telemetry converts the trace
+to bytes with the full-size config's constants, emitting the
+:class:`~repro.core.workload.WorkloadProfile` that ``rtc.evaluate``
+consumes.  Decode steps re-stream the *active* weights every few ms —
+far above the refresh rate — so RTT is ideal for dense archs, while MoE
+archs leave inactive experts untouched (the Algorithm-1
+partial-coverage regime) and small archs on big modules lean on PAAR.
+Step periods come from the dry-run roofline bound when cached, else a
+50 tok/s serving assumption.
 """
 from __future__ import annotations
 
 if __package__ in (None, ""):
     import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
 
-import glob
 import json
 import os
+
+import jax
+import numpy as np
 
 from benchmarks.common import emit, save_json, timed
 from repro.configs import ARCH_IDS, get_config
 from repro.core.allocator import allocate_workload
-from repro.core.dram import module
+from repro.core.dram import GiB, smallest_fitting_module
 from repro.core.rtc import Variant, evaluate, rtt_paar_split
-from repro.core.trace import lm_workload
+from repro.models.transformer import TransformerLM
+from repro.serve import ServeEngine, ServeTelemetry, TrafficModel
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SERVE_CTX = 8192        # deployment context the byte constants assume
+ENGINE_LEN = 32         # smoke engine cache length (CPU-sized)
+PROMPT_LENS = (4, 9, 6, 12)
+NEW_TOKENS = 8
 
 
 def _step_time(arch: str, default: float = 0.02) -> float:
@@ -36,23 +49,48 @@ def _step_time(arch: str, default: float = 0.02) -> float:
     return default
 
 
+def _serve_telemetry(arch: str) -> ServeTelemetry:
+    """Serve a mixed-length request trace through the batched engine.
+
+    The engine runs the smoke config (CPU-sized compute); the telemetry
+    carries the FULL config's byte constants, so the emitted profile
+    pairs a *measured* scheduling trace with production byte magnitudes.
+    """
+    smoke = get_config(arch, smoke=True)
+    model = TransformerLM(smoke)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, max_len=ENGINE_LEN, max_batch=2)
+    # ctx_scale maps the smoke engine's measured per-slot occupancy onto
+    # the deployment context, so KV traffic carries SERVE_CTX magnitudes
+    # (not the 32-token smoke contexts) while keeping the trace's shape.
+    tele = ServeTelemetry(TrafficModel.from_config(get_config(arch),
+                                                   max_len=SERVE_CTX),
+                          ctx_scale=SERVE_CTX / ENGINE_LEN)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, smoke.vocab_size, (n,)).astype(np.int32)
+               for n in PROMPT_LENS]
+    engine.serve(prompts, max_new_tokens=NEW_TOKENS, telemetry=tele)
+    return tele
+
+
 def run():
     rows = []
     for arch in ARCH_IDS:
         cfg = get_config(arch)
-        w = lm_workload(cfg, "decode", _step_time(arch),
-                        global_batch=8, seq_len=8192)
-        # module sized to the smallest of (2/4/8/16/32/64) GB that fits
-        for gb in (2, 4, 8, 16, 32, 64, 128, 256, 512):
-            spec = module(gb)
-            if w.footprint_bytes <= spec.capacity_bytes * 0.95:
-                break
+        tele = _serve_telemetry(arch)
+        w = tele.workload_profile(name=f"{cfg.name}/serve",
+                                  step_period_s=_step_time(arch))
+        spec = smallest_fitting_module(w.footprint_bytes)
+        gb = spec.capacity_bytes // GiB
         alloc = allocate_workload(spec, {"data": w.footprint_bytes})
         rep = evaluate(spec, w, Variant.FULL_RTC_PLUS, alloc)
         rtt, paar = rtt_paar_split(spec, w, alloc)
         rows.append({
             "arch": arch, "family": cfg.family, "dram_gb": gb,
             "footprint_gb": w.footprint_bytes / 2**30,
+            "read_gb_per_step": w.read_bytes_per_iter / 2**30,
+            "decode_steps": tele.decode_steps,
+            "tokens_generated": tele.tokens_generated,
             "rtt": rtt, "paar": paar,
             "dram_savings": rep.dram_savings,
             "refresh_savings": rep.refresh_savings,
@@ -65,7 +103,8 @@ def main():
     for r in rows:
         emit(f"lm_rtc_{r['arch']}", us / len(rows),
              f"refresh_savings={r['refresh_savings']:.3f} "
-             f"dram_savings={r['dram_savings']:.3f} ({r['dram_gb']}GB)")
+             f"dram_savings={r['dram_savings']:.3f} ({r['dram_gb']}GB, "
+             f"{r['decode_steps']} engine steps)")
     save_json("lm_rtc", rows)
 
 

@@ -1,10 +1,13 @@
 """End-to-end driver (the paper's kind is inference/energy): serve a
-small model with batched requests.
+small model with continuous batching.
 
-Prefills a batch of prompts, decodes with temperature sampling, and
-reports throughput — then estimates the DRAM refresh energy RTC would
-save for this exact serving loop (weights re-streamed every step), the
-paper's mechanism applied to the system we just ran.
+Admits a queue of mixed-length prompts into the engine's batch slots
+(one-shot prefill each), decodes with temperature sampling and per-slot
+positions, retires/refills slots mid-flight, and reports throughput —
+then evaluates the DRAM refresh energy RTC would save for this exact
+serving loop from the *engine's own telemetry* (per-step weight +
+KV-cache traffic), the paper's mechanism applied to the system we just
+ran.
 
     PYTHONPATH=src python examples/serve_batched.py [--new-tokens 48]
 """
@@ -16,48 +19,62 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.allocator import allocate_workload
-from repro.core.dram import module
+from repro.core.dram import GiB, smallest_fitting_module
 from repro.core.rtc import Variant, evaluate
-from repro.core.trace import lm_workload
 from repro.models.transformer import TransformerLM
-from repro.serve.engine import ServeEngine
+from repro.serve import ServeEngine, ServeTelemetry, TrafficModel
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--serve-ctx", type=int, default=4096,
+                    help="deployment context for the energy model")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     model = TransformerLM(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.new_tokens)
+    max_len = args.max_prompt_len + args.new_tokens
+    engine = ServeEngine(model, params, max_len=max_len,
+                         max_batch=args.max_batch)
+
+    # energy accounting uses the full-size config's byte constants, with
+    # the smoke run's per-slot occupancies extrapolated to the
+    # deployment context (ctx_scale) so KV traffic and cache footprint
+    # describe the same serve_ctx-sized deployment.
+    full = get_config(args.arch)
+    tele = ServeTelemetry(TrafficModel.from_config(full, args.serve_ctx),
+                          ctx_scale=args.serve_ctx / max_len)
 
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
+    lens = rng.integers(1, args.max_prompt_len + 1, args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(n),)).astype(np.int32)
+               for n in lens]
     t0 = time.time()
-    out = engine.generate(prompts, args.new_tokens,
-                          temperature=args.temperature)
+    outs = engine.serve(prompts, args.new_tokens,
+                        temperature=args.temperature, telemetry=tele)
     dt = time.time() - t0
-    step_time = dt / (args.prompt_len + args.new_tokens)
-    print(f"served {args.batch} requests x {args.new_tokens} new tokens "
-          f"in {dt:.2f}s -> {args.batch*args.new_tokens/dt:.1f} tok/s")
-    print(f"sample continuation: {out[0][:10].tolist()}")
+    n_tok = sum(o.shape[0] for o in outs)
+    print(f"served {args.requests} requests (prompt lens "
+          f"{lens.min()}..{lens.max()}) on {args.max_batch} slots: "
+          f"{n_tok} tokens in {dt:.2f}s -> {n_tok/dt:.1f} tok/s "
+          f"({tele.decode_steps} decode steps, {tele.n_prefills} prefills)")
+    print(f"sample continuation: {outs[0][:10].tolist()}")
 
     # RTC on THIS loop (weights in LPDDR-class memory, edge serving):
-    full = get_config(args.arch)  # energy study uses the real footprint
-    w = lm_workload(full, "decode", step_time,
-                    global_batch=args.batch, seq_len=4096)
-    spec = module(4)
-    alloc = allocate_workload(spec, {"weights": w.footprint_bytes})
+    w = tele.workload_profile(name=f"{full.name}/serve")
+    spec = smallest_fitting_module(w.footprint_bytes)
+    gb = spec.capacity_bytes // GiB
+    alloc = allocate_workload(spec, {"serve": w.footprint_bytes})
     rep = evaluate(spec, w, Variant.FULL_RTC_PLUS, alloc)
-    print(f"\nRTC on this serving loop ({full.name}, 4 GB module): "
+    print(f"\nRTC on this serving loop ({full.name}, {gb} GB module, "
+          f"engine-measured traffic {w.traffic_bytes_per_s/1e9:.2f} GB/s): "
           f"refresh energy -{rep.refresh_savings:.1%}, "
           f"DRAM energy -{rep.dram_savings:.1%}")
 

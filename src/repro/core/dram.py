@@ -97,6 +97,18 @@ def module(capacity_gb: float, **kw) -> DRAMSpec:
     return DRAMSpec(capacity_bytes=int(capacity_gb * GiB), **kw)
 
 
+def smallest_fitting_module(footprint_bytes: int, fill: float = 0.95,
+                            sizes_gb=(2, 4, 8, 16, 32, 64, 128, 256, 512),
+                            **kw) -> DRAMSpec:
+    """Smallest canonical module that holds ``footprint_bytes`` at no
+    more than ``fill`` occupancy (falls back to the largest size)."""
+    for gb in sizes_gb:
+        spec = module(gb, **kw)
+        if footprint_bytes <= spec.capacity_bytes * fill:
+            break
+    return spec
+
+
 MODULE_2GB = module(2)
 MODULE_4GB = module(4)
 MODULE_8GB = module(8)

@@ -45,6 +45,7 @@ __all__ = [
     "ratematch_closed",
     "implicit_fraction",
     "coalesced_access_fraction",
+    "schedule_stats",
 ]
 
 

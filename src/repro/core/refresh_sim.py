@@ -99,12 +99,20 @@ def simulate(
     alloc_hi = alloc_lo + alloc_rows
     if alloc_hi > n_rows:
         raise ValueError("allocation exceeds module")
+    # Bank rounding widens only the *explicit-refresh predicate* (PASR
+    # granularity: the policy refreshes whole banks).  The access stream
+    # and the integrity/violation domain are the workload's, and the
+    # workload still touches exactly its original allocation — sweeping
+    # the rounded span would credit implicit refreshes to rows the
+    # application never allocated.
     if bank_rounded:
         span = max(1, spec.rows_per_bank)
-        alloc_lo = (alloc_lo // span) * span
-        alloc_hi = min(n_rows, -(-alloc_hi // span) * span)
+        bound_lo = (alloc_lo // span) * span
+        bound_hi = min(n_rows, -(-alloc_hi // span) * span)
+    else:
+        bound_lo, bound_hi = alloc_lo, alloc_hi
     matched = rows_accessed_per_window >= n_rows
-    ref_lo, ref_hi, skip = _policy_bounds(variant, n_rows, alloc_lo, alloc_hi, matched)
+    ref_lo, ref_hi, skip = _policy_bounds(variant, n_rows, bound_lo, bound_hi, matched)
 
     def step(carry, _):
         age, cursor = carry

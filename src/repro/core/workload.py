@@ -23,7 +23,7 @@ from typing import Optional
 from repro.core.cnn_zoo import CNNProfile
 from repro.core.dram import DRAMSpec
 
-__all__ = ["WorkloadProfile", "from_cnn", "merge"]
+__all__ = ["WorkloadProfile", "from_cnn", "from_decode", "merge"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +84,41 @@ def from_cnn(
         read_bytes_per_iter=profile.read_bytes_per_frame / locality,
         write_bytes_per_iter=float(profile.write_bytes_per_frame),
         regular=True,
+        row_utilization=row_utilization,
+    )
+
+
+def from_decode(
+    name: str,
+    *,
+    param_read_bytes: float,
+    kv_read_bytes: float,
+    kv_write_bytes: float,
+    footprint_bytes: int,
+    step_period_s: float,
+    regular: bool = True,
+    row_utilization: float = 1.0,
+) -> WorkloadProfile:
+    """LM decode phase: one profile iteration == one decode step.
+
+    Every step re-streams the active weights (``param_read_bytes``) and
+    sweeps the live KV/recurrent state in a fixed order
+    (``kv_read_bytes``), appending one token per slot per attention
+    layer (``kv_write_bytes``) — the pseudo-stationary recurring pattern
+    of Section III-A, so ``regular`` defaults to True and weight
+    streaming keeps full row utilization.  Built for engine telemetry
+    (:mod:`repro.serve.telemetry`), which measures these quantities
+    from a real serving loop instead of hand-deriving them.
+    """
+    if step_period_s <= 0:
+        raise ValueError("step_period_s must be positive")
+    return WorkloadProfile(
+        name=name,
+        footprint_bytes=int(footprint_bytes),
+        iter_period_s=float(step_period_s),
+        read_bytes_per_iter=float(param_read_bytes) + float(kv_read_bytes),
+        write_bytes_per_iter=float(kv_write_bytes),
+        regular=regular,
         row_utilization=row_utilization,
     )
 

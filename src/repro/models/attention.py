@@ -17,7 +17,8 @@ from repro.dist.axisenv import constrain, current_env
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, rope, softcap
 
-__all__ = ["attn_init", "attn_apply", "attn_decode", "KVCache", "init_kv_cache"]
+__all__ = ["attn_init", "attn_apply", "attn_prefill", "attn_decode",
+           "KVCache", "init_kv_cache"]
 
 
 def attn_init(key, cfg: ModelConfig, dtype) -> dict:
@@ -100,8 +101,8 @@ def _sdpa(q, k, v, mask, cfg: ModelConfig):
 QBLOCK = 1024
 
 
-def attn_apply(params, cfg: ModelConfig, x, positions, kind: str):
-    """Full-sequence attention (train / prefill).
+def _attend_causal(q, k, v, cfg: ModelConfig, window: Optional[int]):
+    """Blocked causal (+ optional sliding-window) attention core.
 
     Long sequences use a *blocked* computation: query blocks are
     processed against only their causally (and window-) reachable key
@@ -110,28 +111,59 @@ def attn_apply(params, cfg: ModelConfig, x, positions, kind: str):
     masked blocks — the pure-JAX mirror of the Pallas flash kernel's
     tiling (which substitutes on real TPUs).
     """
+    s = q.shape[1]
+    if s <= 2 * QBLOCK or s % QBLOCK:
+        mask = _mask(s, s, 0, window)
+        return _sdpa(q, k, v, mask, cfg)
+    outs = []
+    for qb in range(s // QBLOCK):
+        qs, qe = qb * QBLOCK, (qb + 1) * QBLOCK
+        if window is not None:
+            ks = max(0, ((qs - window) // QBLOCK) * QBLOCK)
+        else:
+            ks = 0
+        kslice = k[:, ks:qe]
+        vslice = v[:, ks:qe]
+        mask = _mask(QBLOCK, qe - ks, qs - ks, window)
+        outs.append(_sdpa(q[:, qs:qe], kslice, vslice, mask, cfg))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attn_apply(params, cfg: ModelConfig, x, positions, kind: str):
+    """Full-sequence attention (train / prefill)."""
     q, k, v = _project_qkv(params, cfg, x)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     window = cfg.window_size if kind == "local" else None
-    s = x.shape[1]
-    if s <= 2 * QBLOCK or s % QBLOCK:
-        mask = _mask(s, s, 0, window)
-        out = _sdpa(q, k, v, mask, cfg)
-    else:
-        outs = []
-        for qb in range(s // QBLOCK):
-            qs, qe = qb * QBLOCK, (qb + 1) * QBLOCK
-            if window is not None:
-                ks = max(0, ((qs - window) // QBLOCK) * QBLOCK)
-            else:
-                ks = 0
-            kslice = k[:, ks:qe]
-            vslice = v[:, ks:qe]
-            mask = _mask(QBLOCK, qe - ks, qs - ks, window)
-            outs.append(_sdpa(q[:, qs:qe], kslice, vslice, mask, cfg))
-        out = jnp.concatenate(outs, axis=1)
+    out = _attend_causal(q, k, v, cfg, window)
     return out @ params["wo"]
+
+
+def attn_prefill(params, cfg: ModelConfig, x, positions, kind: str,
+                 cache_len: int):
+    """Full-sequence attention that also materializes the decode cache.
+
+    One forward over the whole prompt (same blocked core as
+    ``attn_apply``) whose post-RoPE K/V land in a fresh ring/append
+    cache of ``cache_len`` slots, ready for ``attn_decode`` to continue
+    from position ``s``.  Prompts longer than the cache keep only the
+    last ``cache_len`` positions (the only ones a ring buffer would
+    retain), at their ring slots.
+    """
+    q, k, v = _project_qkv(params, cfg, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window_size if kind == "local" else None
+    out = _attend_causal(q, k, v, cfg, window)
+
+    s = x.shape[1]
+    keep = min(s, cache_len)
+    shape = (x.shape[0], cache_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    slots = jnp.arange(s - keep, s) % cache_len
+    ck = jnp.zeros(shape, k.dtype).at[:, slots].set(k[:, -keep:])
+    cv = jnp.zeros(shape, v.dtype).at[:, slots].set(v[:, -keep:])
+    cache = KVCache(ck, cv, jnp.asarray(keep, jnp.int32))
+    return out @ params["wo"], cache
 
 
 # ---------------------------------------------------------------------------
@@ -151,13 +183,17 @@ def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCach
 
 
 def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
-    """One-token decode. x: [b, 1, d]; pos: [] int32 absolute position.
+    """One-token decode. x: [b, 1, d]; pos: [] or [b] int32 absolute
+    position (vector = per-slot positions for continuous batching).
 
     ``local`` layers use the cache as a ring buffer of ``window_size``
     slots; ``global`` layers append at ``pos``.
     """
     q, k_new, v_new = _project_qkv(params, cfg, x)
-    posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    posv = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q = rope(q, posv, cfg.rope_theta)
     k_new = rope(k_new, posv, cfg.rope_theta)
 
@@ -165,15 +201,21 @@ def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
     # cache_len == window_size for local layers (ring buffer), == max_len
     # for global layers (plain append, since pos < max_len).
     slot = pos % cache_len
-    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    if per_slot:
+        rows = jnp.arange(b)
+        k = cache.k.at[rows, slot].set(k_new[:, 0])
+        v = cache.v.at[rows, slot].set(v_new[:, 0])
+    else:
+        k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
 
-    kv_pos = _cache_positions(cache_len, pos)
+    kv_pos = _cache_positions(cache_len, pos)   # [L] or [b, L]
     valid = kv_pos >= 0
     if kind == "local" and cfg.window_size is not None:
-        valid &= kv_pos > pos - cfg.window_size
+        valid &= kv_pos > (pos[:, None] if per_slot else pos) - cfg.window_size
+    if valid.ndim == 1:
+        valid = valid[None]                      # [1, L] broadcasts over b
     kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    b = x.shape[0]
     scale = hd ** -0.5
     g = cfg.n_heads // kvh
     # Cache sharding choice (mirrors serve.engine.cache_specs): enough
@@ -197,10 +239,11 @@ def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
     # post-rope keys, so attend directly.
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qh, k).astype(jnp.float32) * scale
     logits = softcap(logits, cfg.attn_softcap)
-    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v).reshape(b, 1, -1)
-    new_cache = KVCache(k, v, jnp.minimum(pos + 1, cache_len).astype(jnp.int32))
+    new_len = jnp.minimum(jnp.max(pos) + 1, cache_len).astype(jnp.int32)
+    new_cache = KVCache(k, v, new_len)
     return out @ params["wo"], new_cache
 
 
@@ -208,8 +251,9 @@ def _cache_positions(cache_len: int, pos):
     """Absolute position stored in each ring slot (-1 if empty).
 
     Slot s holds the newest absolute position p <= pos with p % L == s.
+    ``pos`` may be scalar (-> [L]) or [b] (-> [b, L]).
     """
     slots = jnp.arange(cache_len)
     cur_slot = pos % cache_len
-    newest = pos - ((cur_slot - slots) % cache_len)
+    newest = pos[..., None] - ((cur_slot[..., None] - slots) % cache_len)
     return jnp.where(newest >= 0, newest, -1)

@@ -133,6 +133,18 @@ class ModelConfig:
             return self.pattern_tail[layer_idx - grouped]
         return self.attn_pattern[layer_idx % self.pattern_period]
 
+    def decode_cache_len(self, kind: LayerKind, max_len: int) -> int:
+        """Cache slots one attention layer allocates for decoding.
+
+        THE sizing rule: ``global`` layers append up to ``max_len``
+        positions; ``local`` layers keep a ``window_size`` ring.  Both
+        the model's cache construction (init/prefill) and the serving
+        telemetry's byte accounting call this, so they cannot drift.
+        """
+        if kind == "local":
+            return min(max_len, self.window_size or max_len)
+        return max_len
+
     # ---- parameter accounting (roofline MODEL_FLOPS) ------------------------
     def param_counts(self) -> dict:
         d, hd = self.d_model, self.resolved_head_dim

@@ -48,8 +48,15 @@ def moe_init(key, cfg: ModelConfig, dtype) -> dict:
     return p
 
 
-def moe_apply(params, cfg: ModelConfig, x):
-    """x: [b, seq, d] -> (y: [b, seq, d], aux_loss: scalar f32)."""
+def moe_apply(params, cfg: ModelConfig, x, capacity: int | None = None):
+    """x: [b, seq, d] -> (y: [b, seq, d], aux_loss: scalar f32).
+
+    ``capacity`` overrides the per-(virtual-)expert slot count.  Pass
+    ``seq`` for *dropless* dispatch (each expert can absorb every token
+    of the sequence): serving prefill must match the decode path, which
+    never drops — capacity-dropping is a train-time regularizer, not an
+    inference semantic.
+    """
     b, seq, d = x.shape
     e, k = cfg.n_experts, cfg.experts_per_token
     vs = cfg.moe_virtual_split
@@ -70,8 +77,9 @@ def moe_apply(params, cfg: ModelConfig, x):
                       ).reshape(b, seq, k)
         gate_vals = jnp.repeat(gate_vals, vs, axis=-1)
 
-    capacity = max(1, int(cfg.moe_capacity_factor * k * seq / e)) \
-        if seq > 1 else k
+    if capacity is None:
+        capacity = max(1, int(cfg.moe_capacity_factor * k * seq / e)) \
+            if seq > 1 else k
     nk = seq * k
 
     # --- per-sequence rank within expert ---------------------------------

@@ -24,8 +24,8 @@ from repro.dist.axisenv import constrain
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init
 
-__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "RGLRUCache",
-           "init_rglru_cache"]
+__all__ = ["rglru_init", "rglru_apply", "rglru_prefill", "rglru_decode",
+           "RGLRUCache", "init_rglru_cache"]
 
 _C = 8.0  # Griffin's fixed temperature on the recurrence gate
 
@@ -74,9 +74,20 @@ def _conv1d(params, x, state=None):
 
 def rglru_apply(params, cfg: ModelConfig, x):
     """Full-sequence recurrent block. x: [b, s, d] -> [b, s, d]."""
+    y, _ = rglru_prefill(params, cfg, x)
+    return y
+
+
+def rglru_prefill(params, cfg: ModelConfig, x):
+    """Full-sequence recurrent block that also returns the decode cache.
+
+    The associative scan already materializes the hidden state at every
+    position; the cache is simply its last slice plus the conv tail, so
+    serving prefill costs the same one forward as training.
+    """
     y = constrain(x @ params["wx"], "B", None, "M")
     gate = constrain(x @ params["wgate"], "B", None, "M")
-    y, _ = _conv1d(params, y)
+    y, conv_state = _conv1d(params, y)
     a, x_in = _gates(params, y)
 
     def combine(e1, e2):
@@ -86,7 +97,7 @@ def rglru_apply(params, cfg: ModelConfig, x):
 
     _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
     out = h.astype(x.dtype) * jax.nn.gelu(gate)
-    return out @ params["out_proj"]
+    return out @ params["out_proj"], RGLRUCache(conv=conv_state, h=h[:, -1])
 
 
 class RGLRUCache(NamedTuple):

@@ -24,7 +24,8 @@ from repro.dist.axisenv import constrain
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init
 
-__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "SSMCache", "init_ssm_cache"]
+__all__ = ["ssm_init", "ssm_apply", "ssm_prefill", "ssm_decode", "SSMCache",
+           "init_ssm_cache"]
 
 CHUNK = 128  # sequence chunk for the hybrid scan
 
@@ -97,27 +98,45 @@ def _conv1d(params, x, state=None):
 
 def ssm_apply(params, cfg: ModelConfig, x):
     """Full-sequence Mamba block. x: [b, s, d] -> [b, s, d]."""
+    y, _ = ssm_prefill(params, cfg, x)
+    return y
+
+
+def ssm_prefill(params, cfg: ModelConfig, x):
+    """Full-sequence Mamba block that also returns the decode cache.
+
+    Same chunked hybrid scan as training, generalized to arbitrary
+    lengths (full chunks via ``lax.scan``, a shorter remainder chunk
+    processed once) so serving prompts need no padding — padding would
+    corrupt the carried recurrent state.  Returns (y [b, s, d],
+    :class:`SSMCache`) positioned after the last prompt token.
+    """
     b, s, d = x.shape
     di = cfg.d_inner
     xz = constrain(x @ params["in_proj"], "B", None, "M")
     xin, z = xz[..., :di], xz[..., di:]
-    xc, _ = _conv1d(params, xin)
+    xc, conv_state = _conv1d(params, xin)
     xc = jax.nn.silu(xc)
 
     chunk = min(CHUNK, s)
-    if s % chunk:
-        raise ValueError(f"seq {s} not a multiple of chunk {chunk}")
-    xcs = xc.reshape(b, s // chunk, chunk, di).swapaxes(0, 1)
+    n_full = s // chunk
+    h = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    ys = []
+    if n_full:
+        xcs = xc[:, :n_full * chunk].reshape(b, n_full, chunk, di).swapaxes(0, 1)
 
-    def step(h, xchunk):
-        y, h_next = _ssm_inner(params, cfg, xchunk, h)
-        return h_next, y
+        def step(h, xchunk):
+            y, h_next = _ssm_inner(params, cfg, xchunk, h)
+            return h_next, y
 
-    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
-    _, ys = jax.lax.scan(step, h0, xcs)
-    y = ys.swapaxes(0, 1).reshape(b, s, di)
+        h, yfull = jax.lax.scan(step, h, xcs)
+        ys.append(yfull.swapaxes(0, 1).reshape(b, n_full * chunk, di))
+    if s - n_full * chunk:
+        y_rem, h = _ssm_inner(params, cfg, xc[:, n_full * chunk:], h)
+        ys.append(y_rem)
+    y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
     y = y * jax.nn.silu(z)
-    return y @ params["out_proj"]
+    return y @ params["out_proj"], SSMCache(conv=conv_state, h=h)
 
 
 # ---------------------------------------------------------------------------

@@ -217,11 +217,9 @@ class TransformerLM:
     # ----------------------------------------------------------------- decode
     def _one_cache(self, kind, batch, max_len, dt):
         cfg = self.cfg
-        if kind == "global":
-            return attn.init_kv_cache(cfg, batch, max_len, dt)
-        if kind == "local":
+        if kind in ("global", "local"):
             return attn.init_kv_cache(
-                cfg, batch, min(max_len, cfg.window_size or max_len), dt)
+                cfg, batch, cfg.decode_cache_len(kind, max_len), dt)
         if kind == "ssm":
             return ssm_mod.init_ssm_cache(cfg, batch, dt)
         if kind == "rglru":
@@ -247,6 +245,77 @@ class TransformerLM:
                      for kind in cfg.pattern_tail)
         return {"groups": tuple(groups), "tail": tail}
 
+    def _block_prefill(self, kind, p, x, positions, max_len):
+        """Full-sequence block forward that also emits the decode cache."""
+        cfg = self.cfg
+        if kind in ("global", "local"):
+            h, c = attn.attn_prefill(p["attn"], cfg, rmsnorm(p["ln1"], x),
+                                     positions, kind,
+                                     cfg.decode_cache_len(kind, max_len))
+            x = x + h
+            hh = rmsnorm(p["ln2"], x)
+            if cfg.n_experts:
+                # dropless dispatch: prefill must agree with decode,
+                # which never capacity-drops (seq = 1).
+                y, _ = moe_mod.moe_apply(p["moe"], cfg, hh,
+                                         capacity=hh.shape[1])
+            else:
+                y = mlp_apply(p["mlp"], hh, cfg.mlp_activation)
+            x = x + y
+        elif kind == "ssm":
+            h, c = ssm_mod.ssm_prefill(p["ssm"], cfg, rmsnorm(p["ln1"], x))
+            x = x + h
+        elif kind == "rglru":
+            h, c = rglru_mod.rglru_prefill(p["rec"], cfg, rmsnorm(p["ln1"], x))
+            x = x + h
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x),
+                              cfg.mlp_activation)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+        return x, c
+
+    def prefill(self, params, tokens, max_len: int):
+        """One-shot serving prefill: full-sequence forward + decode cache.
+
+        tokens: [b, s] int32 with positions 0..s-1.  Returns
+        (last-position logits [b, vocab] f32, cache) where the cache has
+        exactly the ``init_cache(b, max_len)`` structure, positioned so
+        ``decode_step(..., pos=s)`` continues the sequence.  Replaces an
+        O(s)-dispatch decode-step prefill with ONE lowered forward.
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        x = constrain(x, "B", "S", None)
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def group_body(x, gp):
+            cs = []
+            for i, kind in enumerate(cfg.attn_pattern):
+                x, c = self._block_prefill(kind, gp[i], x, positions, max_len)
+                x = constrain(x, "B", "S", None)
+                cs.append(c)
+            return x, tuple(cs)
+
+        if self.unroll:
+            per_group = []
+            for g in range(cfg.n_groups):
+                gp = jax.tree.map(lambda l: l[g], params["blocks"])
+                x, cs = group_body(x, gp)
+                per_group.append(cs)
+            gcaches = jax.tree.map(lambda *ls: jnp.stack(ls), *per_group)
+        else:
+            x, gcaches = jax.lax.scan(group_body, x, params["blocks"])
+        tail_caches = []
+        for i, kind in enumerate(cfg.pattern_tail):
+            x, c = self._block_prefill(kind, params["tail"][i], x, positions,
+                                       max_len)
+            x = constrain(x, "B", "S", None)
+            tail_caches.append(c)
+        cache = {"groups": gcaches, "tail": tuple(tail_caches)}
+        logits = self._unembed(params, x[:, -1:])[:, 0, :]
+        return logits, cache
+
     def _block_decode(self, kind, p, c, x, pos):
         cfg = self.cfg
         if kind in ("global", "local"):
@@ -270,7 +339,9 @@ class TransformerLM:
         return x, c
 
     def decode_step(self, params, cache, token, pos):
-        """token: [b] int32 (or [b, d] embeds); pos: [] int32.
+        """token: [b] int32 (or [b, d] embeds); pos: [] int32, or [b]
+        int32 for per-slot positions (continuous batching: each batch
+        slot decodes its own sequence offset).
 
         Returns (logits [b, vocab] f32, new_cache).
         """

@@ -9,11 +9,26 @@ Cache sharding: batch on the data axes, heads/state channels on
 ``model``; for single-sequence long-context (`long_500k`, batch=1) the
 policy's ``kv_seq_axis`` shards the cache *length* instead, which GSPMD
 turns into flash-decode-style distributed attention.
+
+:class:`ServeEngine` is the production batched loop on top of the
+builders: one-shot prefill (a single lowered full-sequence forward per
+admitted request, not ``prompt_len`` decode dispatches), continuous
+batching over ``max_batch`` slots with per-slot positions (sequences of
+mixed prompt lengths admit and retire mid-flight), and a unified
+greedy/temperature/top-k sampler applied identically from the *first*
+generated token.  Sampling keys are derived per (request, token index),
+never from the step loop, so generations are bit-independent of how
+requests happen to be batched together.  An optional telemetry sink
+(:mod:`repro.serve.telemetry`) accounts the engine's per-step DRAM
+traffic into a :class:`repro.core.workload.WorkloadProfile` for the RTC
+policy engine.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional, Tuple
+import time
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +42,7 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import TransformerLM
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
-           "ServeEngine"]
+           "Request", "ServeEngine"]
 
 
 def cache_specs(model: TransformerLM, batch: int, cache_len: int,
@@ -75,12 +90,19 @@ def cache_specs(model: TransformerLM, batch: int, cache_len: int,
 
 def build_prefill_step(model: TransformerLM, mesh: Mesh,
                        policy: ShardingPolicy, donate: bool = False,
-                       last_only: bool = True):
+                       last_only: bool = True,
+                       cache_len: Optional[int] = None):
     """Full-sequence forward with sharded params/batch.
 
     ``last_only`` (production default): unembed only the final position
     — serving prefill needs the first sampled token, not [b, s, vocab]
     logits (4.2 GiB/device of pure output for gemma2-9b @32k).
+
+    ``cache_len`` (serving): also materialize the decode cache — the
+    jitted function then lowers ``model.prefill`` and returns
+    (last-position logits [b, vocab] f32, cache) with the exact
+    ``init_cache(b, cache_len)`` structure, ready for
+    ``build_decode_step`` to continue at position ``prompt_len``.
     """
     pspecs = param_specs(jax.eval_shape(
         lambda: model.init(jax.random.key(0))), policy)
@@ -90,6 +112,8 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
 
     def prefill(params, tokens):
         with axis_env(policy, mesh=mesh):
+            if cache_len is not None:
+                return model.prefill(params, tokens, cache_len)
             if last_only:
                 hidden, _ = model.hidden(params, tokens=tokens)
                 return model._unembed(params, hidden[:, -1:])
@@ -101,9 +125,14 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
 
 def build_decode_step(model: TransformerLM, mesh: Mesh,
                       policy: ShardingPolicy, batch: int, cache_len: int,
-                      kv_seq_axis=None):
+                      kv_seq_axis=None, per_slot_pos: bool = False):
     """One-token decode with sharded KV cache. Returns
-    (step_fn, param_shardings, cache_shardings)."""
+    (step_fn, param_shardings, cache_shardings).
+
+    ``per_slot_pos``: the position argument is a [batch] vector (each
+    slot decodes its own sequence offset — continuous batching) instead
+    of one scalar shared by the whole batch.
+    """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     pspecs = param_specs(jax.eval_shape(
         lambda: model.init(jax.random.key(0))), policy)
@@ -115,6 +144,11 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
                        is_leaf=lambda x: isinstance(x, P))
     tok_sh = NamedSharding(
         mesh, P(policy.batch_spec if batch > 1 else None))
+    if per_slot_pos:
+        pos_sh = NamedSharding(
+            mesh, P(policy.batch_spec if batch > 1 else None))
+    else:
+        pos_sh = NamedSharding(mesh, P())
 
     def decode(params, cache, token, pos):
         seq_override = kv_seq_axis if kv_seq_axis is not None else policy.seq_axis
@@ -125,7 +159,7 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
 
     step = jax.jit(
         decode,
-        in_shardings=(psh, csh, tok_sh, NamedSharding(mesh, P())),
+        in_shardings=(psh, csh, tok_sh, pos_sh),
         out_shardings=(NamedSharding(mesh, P(
             policy.batch_spec if batch > 1 else None, None)), csh),
         donate_argnums=(1,),
@@ -133,37 +167,250 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
     return step, psh, csh
 
 
-@dataclasses.dataclass
+# ---------------------------------------------------------------------------
+# Batched serving engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class Request:
+    """One admitted generation request (engine-internal ids).
+
+    ``eq=False``: the ndarray prompt makes generated equality/hash
+    raise; identity comparison is the useful semantic for requests.
+    """
+    req_id: int
+    prompt: np.ndarray          # [plen] int32, plen >= 1
+    max_new_tokens: int
+
+
+class _Slot:
+    """Mutable scheduler state of one occupied batch slot."""
+    __slots__ = ("req", "pos", "emitted", "out")
+
+    def __init__(self, req: Request, pos: int, first_token: int):
+        self.req = req
+        self.pos = pos            # next decode feed position
+        self.emitted = 1          # tokens sampled so far (incl. first)
+        self.out = [first_token]
+
+
 class ServeEngine:
-    """Minimal batched serving loop (example / integration tests)."""
+    """Continuous-batching serving loop over ``max_batch`` cache slots.
 
-    model: TransformerLM
-    params: dict
-    max_len: int = 256
+    Requests of mixed prompt lengths are admitted into free slots
+    mid-flight (one-shot prefill + cache insertion), decoded together
+    with per-slot positions, and retired on EOS / request budget /
+    ``max_len`` — the freed slot is immediately refilled from the
+    pending queue.  Slot admission order never changes a request's
+    tokens: sampling keys are a pure function of (seed, request id,
+    token index).
 
+    Compile note: the prefill function retraces per distinct prompt
+    length (exact-length lowering keeps recurrent-state hand-off
+    trivially correct — right-padding would feed pad tokens into
+    ssm/rglru state).  Length-bucketed prefill with masked positions is
+    the production fix and is tracked in the ROADMAP.
+    """
+
+    def __init__(self, model: TransformerLM, params: dict,
+                 max_len: int = 256, max_batch: int = 8,
+                 eos_id: Optional[int] = None, bos_id: Optional[int] = None,
+                 mesh: Optional[Mesh] = None,
+                 policy: Optional[ShardingPolicy] = None):
+        self.model = model
+        self.params = params
+        self.max_len = int(max_len)
+        self.max_batch = int(max_batch)
+        self.eos_id = eos_id
+        self.bos_id = bos_id
+        if mesh is None:
+            mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                        ("data", "model"))
+        if policy is None:
+            policy = ShardingPolicy.for_mesh(mesh)
+        self.mesh, self.policy = mesh, policy
+        self._prefill = build_prefill_step(
+            model, mesh, policy, cache_len=self.max_len)[0]
+        self._decode = build_decode_step(
+            model, mesh, policy, batch=self.max_batch,
+            cache_len=self.max_len, per_slot_pos=True)[0]
+        self._insert = jax.jit(self._insert_cache)
+        self._keys = jax.jit(jax.vmap(
+            lambda base, r, i: jax.random.fold_in(jax.random.fold_in(base, r), i),
+            in_axes=(None, 0, 0)))
+        self._samplers = {}
+
+    # ------------------------------------------------------------- sampling
+    def _sampler(self, top_k: Optional[int]):
+        """Jitted unified sampler: greedy / temperature / top-k.
+
+        Every emitted token — including the one sampled from prefill
+        logits — goes through this one function, so ``temperature``
+        applies from the first token (the seed engine argmaxed it).
+        """
+        if top_k is not None and top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        if top_k in self._samplers:
+            return self._samplers[top_k]
+
+        def sample(logits, keys, temperature):
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+            if top_k is not None and top_k < logits.shape[-1]:
+                kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
+                scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+            drawn = jax.vmap(jax.random.categorical)(keys, scaled)
+            return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)
+
+        fn = jax.jit(sample)
+        self._samplers[top_k] = fn
+        return fn
+
+    # ---------------------------------------------------------- cache insert
+    @staticmethod
+    def _insert_cache(cache, one, slot):
+        """Write a prefilled batch-1 cache into batch slot ``slot``."""
+        def ins(path, big, small):
+            name = str(getattr(path[-1], "name",
+                               getattr(path[-1], "key", "")))
+            if name == "length":
+                # single high-water mark shared by the batch; the decode
+                # path recomputes per-slot validity from positions.
+                return jnp.maximum(big, small)
+            ax = 1 if str(getattr(path[0], "key", "")) == "groups" else 0
+            start = [0] * big.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(big, small, tuple(start))
+
+        return jax.tree_util.tree_map_with_path(ins, cache, one)
+
+    # -------------------------------------------------------------- requests
+    def _admit_prompt(self, prompt) -> np.ndarray:
+        p = np.asarray(prompt, np.int32).reshape(-1)
+        if p.size == 0:
+            if self.bos_id is None:
+                raise ValueError(
+                    "empty prompt: generation must start from at least one "
+                    "token; construct the engine with bos_id= to serve "
+                    "BOS-only requests")
+            p = np.asarray([self.bos_id], np.int32)
+        if p.size > self.max_len:
+            raise ValueError(
+                f"prompt length {p.size} exceeds engine max_len {self.max_len}")
+        return p
+
+    # ----------------------------------------------------------------- serve
+    def serve(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
+              temperature: float = 0.0, top_k: Optional[int] = None,
+              seed: int = 0, eos_id: Optional[int] = None,
+              telemetry=None) -> List[np.ndarray]:
+        """Serve a batch of requests with continuous batching.
+
+        prompts: sequence of 1-D int32 token arrays (mixed lengths fine;
+        empty prompts require ``bos_id``).  Returns the generated tokens
+        of each request, in input order (each up to ``max_new_tokens``,
+        shorter on EOS or cache exhaustion).  ``eos_id`` overrides the
+        engine default for this call.  ``telemetry`` is an optional sink
+        with ``record_prefill(plen, dt)`` / ``record_decode(ctx_lengths,
+        dt)`` hooks — see :class:`repro.serve.telemetry.ServeTelemetry`.
+        """
+        if max_new_tokens < 0:
+            raise ValueError("max_new_tokens must be >= 0")
+        eos = self.eos_id if eos_id is None else eos_id
+        requests = [Request(i, self._admit_prompt(p), max_new_tokens)
+                    for i, p in enumerate(prompts)]
+        outputs: List[Optional[np.ndarray]] = [None] * len(requests)
+        if max_new_tokens == 0:
+            return [np.zeros((0,), np.int32) for _ in requests]
+
+        B = self.max_batch
+        sample = self._sampler(top_k)
+        base = jax.random.key(seed)
+        temp = float(temperature)
+        cache = self.model.init_cache(B, self.max_len)
+        slots: List[Optional[_Slot]] = [None] * B
+        tok_vec = np.zeros((B,), np.int32)
+        pos_vec = np.zeros((B,), np.int32)
+        req_vec = np.zeros((B,), np.int32)
+        emit_vec = np.zeros((B,), np.int32)
+        pending = collections.deque(requests)
+
+        def retire(s: int):
+            st = slots[s]
+            outputs[st.req.req_id] = np.asarray(st.out, np.int32)
+            slots[s] = None
+
+        def finished(st: _Slot, token: int) -> bool:
+            if st.emitted >= st.req.max_new_tokens:
+                return True
+            if eos is not None and token == eos:
+                return True
+            return st.pos >= self.max_len    # cache exhausted
+
+        def admit():
+            nonlocal cache
+            for s in range(B):
+                while slots[s] is None and pending:
+                    req = pending.popleft()
+                    plen = req.prompt.shape[0]
+                    t0 = time.perf_counter()
+                    logits, one = self._prefill(self.params,
+                                                jnp.asarray(req.prompt[None]))
+                    cache = self._insert(cache, one, jnp.asarray(s, jnp.int32))
+                    key = self._keys(base, np.asarray([req.req_id], np.int32),
+                                     np.zeros((1,), np.int32))
+                    first = int(np.asarray(
+                        sample(logits, key, jnp.float32(temp)))[0])
+                    if telemetry is not None:
+                        telemetry.record_prefill(
+                            plen, time.perf_counter() - t0)
+                    st = _Slot(req, pos=plen, first_token=first)
+                    slots[s] = st
+                    tok_vec[s], pos_vec[s] = first, plen
+                    req_vec[s], emit_vec[s] = req.req_id, st.emitted
+                    if finished(st, first):
+                        retire(s)           # keep admitting into this slot
+
+        admit()
+        while any(st is not None for st in slots):
+            active = [s for s in range(B) if slots[s] is not None]
+            ctx = [int(pos_vec[s]) + 1 for s in active]
+            t0 = time.perf_counter()
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(tok_vec),
+                                         jnp.asarray(pos_vec))
+            keys = self._keys(base, req_vec, emit_vec)
+            toks = np.asarray(sample(logits, keys, jnp.float32(temp)))
+            if telemetry is not None:
+                telemetry.record_decode(ctx, time.perf_counter() - t0)
+            for s in active:
+                st = slots[s]
+                token = int(toks[s])
+                st.out.append(token)
+                st.emitted += 1
+                st.pos += 1
+                tok_vec[s], pos_vec[s], emit_vec[s] = token, st.pos, st.emitted
+                if finished(st, token):
+                    retire(s)
+            admit()
+        return outputs  # type: ignore[return-value]
+
+    # -------------------------------------------------------------- generate
     def generate(self, prompts: np.ndarray, n_new: int,
-                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
-        """prompts: [b, prompt_len] int32 -> [b, n_new] int32."""
-        b, plen = prompts.shape
-        cache = self.model.init_cache(b, self.max_len)
-        decode = jax.jit(self.model.decode_step)
-        tok = None
-        # prefill token-by-token through the decode path (engine-level
-        # simplicity; the sharded builders above lower true prefill).
-        for t in range(plen):
-            logits, cache = decode(self.params, cache,
-                                   jnp.asarray(prompts[:, t]), jnp.asarray(t))
-        out = []
-        key = jax.random.key(seed)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for i in range(n_new):
-            out.append(np.asarray(tok))
-            logits, cache = decode(self.params, cache, tok,
-                                   jnp.asarray(plen + i))
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, logits / temperature, axis=-1).astype(jnp.int32)
-            else:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return np.stack(out, axis=1)
+                 temperature: float = 0.0, top_k: Optional[int] = None,
+                 seed: int = 0, eos_id: Optional[int] = None) -> np.ndarray:
+        """prompts: [b, prompt_len] int32 -> [b, n_new] int32.
+
+        Batch-API wrapper over :meth:`serve`; sequences that retire
+        early are right-padded with the EOS id, or with -1 (never a
+        valid vocab id) when no EOS is configured — cache-exhaustion
+        truncation must stay distinguishable from generated tokens.
+        """
+        prompts = np.asarray(prompts, np.int32)
+        outs = self.serve(list(prompts), n_new, temperature=temperature,
+                          top_k=top_k, seed=seed, eos_id=eos_id)
+        eos = self.eos_id if eos_id is None else eos_id
+        pad = eos if eos is not None else -1
+        full = np.full((len(outs), n_new), pad, np.int32)
+        for i, o in enumerate(outs):
+            full[i, :o.shape[0]] = o
+        return full

@@ -1,0 +1,176 @@
+"""Serving telemetry: account engine DRAM traffic for the RTC engine.
+
+The paper's closing argument is that RTC applies to any workload whose
+DRAM access pattern stays predictable over a retention window — an LM
+decode loop is exactly that (every step re-streams the active weights
+and sweeps the KV cache in order).  This module closes the loop between
+the serving stack and the energy model: the engine reports *events*
+(one prefill of ``plen`` tokens; one decode step over live contexts),
+:class:`TrafficModel` converts them to bytes for a target deployment
+config, and :meth:`ServeTelemetry.workload_profile` folds the result
+into a :class:`repro.core.workload.WorkloadProfile` that
+``repro.core.rtc.evaluate`` / ``repro.core.refresh_sim.simulate``
+consume directly.
+
+Splitting events from byte constants means the *scheduling trace* can
+come from a real (smoke-scale) engine run while the *byte magnitudes*
+come from the full-size deployment config — the traffic pattern is
+measured, not hand-built, and the energy numbers still describe the
+production model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.workload import WorkloadProfile, from_decode
+from repro.models.config import ModelConfig
+
+__all__ = ["TrafficModel", "ServeTelemetry"]
+
+_ITEMSIZE = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficModel:
+    """Per-event DRAM byte constants of one model deployment.
+
+    ``kv_caps`` / ``kv_token_bytes`` carry one entry per attention layer
+    (cache slots, K+V bytes per cached token); recurrent (ssm/rglru)
+    layers contribute ``state_bytes`` of O(1) per-slot state that is
+    read *and* written every step.
+    """
+
+    param_bytes: int            # resident weight bytes (footprint share)
+    param_read_bytes: int       # active weight bytes streamed per step
+    kv_caps: Tuple[int, ...]
+    kv_token_bytes: Tuple[int, ...]
+    state_bytes: int
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, max_len: int) -> "TrafficModel":
+        itemsize = _ITEMSIZE[cfg.dtype]
+        counts = cfg.param_counts()
+        caps, bpt = [], []
+        state = 0
+        for i in range(cfg.n_layers):
+            kind = cfg.layer_kind(i)
+            if kind in ("global", "local"):
+                caps.append(cfg.decode_cache_len(kind, max_len))
+                bpt.append(2 * cfg.n_kv_heads * cfg.resolved_head_dim
+                           * itemsize)
+            elif kind == "ssm":
+                state += ((cfg.ssm_conv - 1) * cfg.d_inner * itemsize
+                          + cfg.d_inner * cfg.ssm_state * 4)   # h is f32
+            elif kind == "rglru":
+                dl = cfg.resolved_lru_width
+                state += (cfg.conv1d_width - 1) * dl * itemsize + dl * 4
+        return cls(
+            param_bytes=counts["total"] * itemsize,
+            param_read_bytes=cfg.active_param_counts() * itemsize,
+            kv_caps=tuple(caps),
+            kv_token_bytes=tuple(bpt),
+            state_bytes=state,
+        )
+
+    # ------------------------------------------------------------ per event
+    @property
+    def cache_slot_bytes(self) -> int:
+        """Allocated decode-cache bytes per batch slot."""
+        return sum(c * b for c, b in zip(self.kv_caps, self.kv_token_bytes)) \
+            + self.state_bytes
+
+    def kv_read_bytes(self, ctx: int) -> int:
+        """KV bytes one slot with ``ctx`` cached tokens reads per step."""
+        return sum(min(ctx, c) * b
+                   for c, b in zip(self.kv_caps, self.kv_token_bytes))
+
+    @property
+    def kv_write_bytes(self) -> int:
+        """KV bytes one slot appends per step (one token per layer)."""
+        return sum(self.kv_token_bytes)
+
+
+class ServeTelemetry:
+    """Accumulates engine events and emits the RTC workload profile.
+
+    ``ctx_scale`` linearly extrapolates the recorded per-slot context
+    lengths before byte conversion (each layer still caps at its cache
+    length).  Use it when the scheduling trace comes from a downsized
+    engine (e.g. a CPU smoke run with ``max_len=32``) but the profile
+    should describe a deployment context: ``ctx_scale = serve_ctx /
+    engine.max_len`` maps the measured occupancy shape onto the target
+    context without hand-building the traffic.
+    """
+
+    def __init__(self, traffic: TrafficModel, ctx_scale: float = 1.0):
+        self.traffic = traffic
+        self.ctx_scale = float(ctx_scale)
+        self.n_prefills = 0
+        self.prefill_tokens = 0
+        self.prefill_time_s = 0.0
+        self.decode_steps = 0
+        self.decode_time_s = 0.0
+        self.tokens_generated = 0
+        self.max_live = 0
+        self._param_read_bytes = 0.0   # active weights streamed per step
+        self._kv_read_bytes = 0.0      # KV sweeps + recurrent state reads
+        self._write_bytes = 0.0        # KV appends + recurrent state writes
+
+    # ------------------------------------------------------------- recording
+    def record_prefill(self, plen: int, dt: float = 0.0) -> None:
+        self.n_prefills += 1
+        self.prefill_tokens += int(plen)
+        self.prefill_time_s += dt
+        self.tokens_generated += 1   # first token samples off prefill logits
+
+    def record_decode(self, ctx_lengths: Sequence[int], dt: float = 0.0) -> None:
+        """One batched decode step over live slots with the given
+        per-slot context lengths (cached tokens attended)."""
+        t = self.traffic
+        live = len(ctx_lengths)
+        self.decode_steps += 1
+        self.decode_time_s += dt
+        self.tokens_generated += live
+        self.max_live = max(self.max_live, live)
+        self._param_read_bytes += t.param_read_bytes
+        self._kv_read_bytes += t.state_bytes * live \
+            + sum(t.kv_read_bytes(int(round(c * self.ctx_scale)))
+                  for c in ctx_lengths)
+        self._write_bytes += (t.kv_write_bytes + t.state_bytes) * live
+
+    # ------------------------------------------------------------- reporting
+    @property
+    def decode_tok_per_s(self) -> float:
+        if self.decode_time_s <= 0:
+            return 0.0
+        return (self.tokens_generated - self.n_prefills) / self.decode_time_s
+
+    def workload_profile(self, name: str = "serve",
+                         step_period_s: Optional[float] = None,
+                         row_utilization: float = 1.0) -> WorkloadProfile:
+        """Fold the recorded decode traffic into a `WorkloadProfile`.
+
+        One profile iteration == one *mean* decode step of the recorded
+        trace.  ``step_period_s`` overrides the measured mean step wall
+        time (e.g. with a dry-run roofline bound when the trace was
+        collected on a smoke model).
+        """
+        if self.decode_steps == 0:
+            raise ValueError("no decode steps recorded")
+        n = self.decode_steps
+        period = step_period_s if step_period_s is not None \
+            else self.decode_time_s / n
+        if period <= 0:
+            raise ValueError("step period must be positive")
+        footprint = self.traffic.param_bytes \
+            + self.max_live * self.traffic.cache_slot_bytes
+        return from_decode(
+            name,
+            param_read_bytes=self._param_read_bytes / n,
+            kv_read_bytes=self._kv_read_bytes / n,
+            kv_write_bytes=self._write_bytes / n,
+            footprint_bytes=footprint,
+            step_period_s=period,
+            row_utilization=row_utilization,
+        )

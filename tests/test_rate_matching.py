@@ -78,6 +78,22 @@ def test_no_starvation(n_a, n_r):
             run = 0
 
 
+def test_public_api_exports():
+    """The public surface is consistent: everything the tests (and the
+    simulator) import is in ``__all__`` and star-importable —
+    ``schedule_stats`` used to be importable but unexported."""
+    import repro.core.rate_matching as rm
+    exported = set(rm.__all__)
+    assert "schedule_stats" in exported
+    for name in exported:
+        assert hasattr(rm, name), name
+    ns = {}
+    exec("from repro.core.rate_matching import *", ns)
+    assert exported <= set(ns)
+    p, ones, zeros = ns["schedule_stats"](2, 4)
+    assert (p, ones, zeros) == (2, 1, 1)
+
+
 @given(st.integers(0, 10_000_000), st.integers(1, 10_000_000))
 @settings(max_examples=50, deadline=None)
 def test_module_scale_rates(n_a, n_r):

@@ -63,6 +63,24 @@ def test_fullrtc_integrity_property(alloc, na, windows):
     assert r.refresh_savings >= paar_floor - 1e-9
 
 
+@pytest.mark.parametrize("variant", [Variant.MID_RTC, Variant.FULL_RTC])
+def test_bank_rounding_only_widens_refresh_predicate(variant):
+    """Regression: bank rounding must widen only the explicit-refresh
+    bound, NOT the simulated access stream — the workload still touches
+    exactly its allocation, so implicit (access-coalesced) refreshes are
+    identical with rounding on or off for the same stream, and the
+    widened REF span can only add explicit refreshes."""
+    kw = dict(alloc_rows=3000, rows_accessed_per_window=700,
+              n_windows=8, alloc_lo=100)   # deliberately bank-misaligned
+    assert kw["alloc_lo"] % SPEC.rows_per_bank != 0
+    assert (kw["alloc_lo"] + kw["alloc_rows"]) % SPEC.rows_per_bank != 0
+    a = simulate(SPEC, variant, **kw, bank_rounded=False)
+    b = simulate(SPEC, variant, **kw, bank_rounded=True)
+    assert a.implicit_refreshes == b.implicit_refreshes
+    assert b.explicit_refreshes >= a.explicit_refreshes
+    assert a.violations == 0 and b.violations == 0
+
+
 def test_pallas_backend_matches_ref():
     kw = dict(alloc_rows=5000, rows_accessed_per_window=1500, n_windows=6)
     a = simulate(SPEC, Variant.FULL_RTC, backend="ref", **kw)

@@ -1,43 +1,221 @@
-"""Serving engine + optimizer units."""
+"""Serving engine (prefill / continuous batching / sampling / telemetry)
++ optimizer units."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.dram import module
+from repro.core.rtc import Variant, evaluate
 from repro.models.transformer import TransformerLM
-from repro.serve.engine import ServeEngine
+from repro.serve import ServeEngine, ServeTelemetry, TrafficModel
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
                                    cosine_schedule, global_norm)
 
+# randomly-initialized smoke models have near-degenerate logits (one
+# dominant token); this temperature flattens them enough to exercise
+# the stochastic path
+HOT = 50.0
 
-def test_serve_engine_greedy_deterministic():
-    cfg = get_config("musicgen-medium", smoke=True)
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
     model = TransformerLM(cfg)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, max_len=24)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def engine(qwen):
+    _, model, params = qwen
+    return ServeEngine(model, params, max_len=32, max_batch=3)
+
+
+@pytest.fixture(scope="module")
+def solo_engine(qwen):
+    """Same model, one batch slot: the per-sequence reference."""
+    _, model, params = qwen
+    return ServeEngine(model, params, max_len=32, max_batch=1)
+
+
+@pytest.fixture(scope="module")
+def mixed_prompts(qwen):
+    cfg = qwen[0]
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in (5, 9, 3, 12, 7)]
+
+
+# ---------------------------------------------------------------------------
+# one-shot prefill
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "mixtral-8x22b"])
+def test_prefill_matches_decode_sweep(arch):
+    """model.prefill (ONE full-sequence forward) must agree with the
+    token-by-token decode path — logits and the continued generation.
+    Covers the ring/append KV caches, recurrent (conv/ssm/rglru) state
+    hand-off, and dropless MoE prefill dispatch."""
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    toks = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 7)).astype(np.int32)
+
+    logits_p, cache_p = jax.jit(
+        lambda p, t: model.prefill(p, t, 24))(params, jnp.asarray(toks))
+    dec = jax.jit(model.decode_step)
+    cache_d = model.init_cache(2, 24)
+    for t in range(7):
+        logits_d, cache_d = dec(params, cache_d,
+                                jnp.asarray(toks[:, t]), jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               rtol=1e-4, atol=1e-4)
+    tok_p = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    tok_d = jnp.argmax(logits_d, -1).astype(jnp.int32)
+    for i in range(3):   # caches must be interchangeable going forward
+        lp, cache_p = dec(params, cache_p, tok_p, jnp.asarray(7 + i))
+        ld, cache_d = dec(params, cache_d, tok_d, jnp.asarray(7 + i))
+        tok_p = jnp.argmax(lp, -1).astype(jnp.int32)
+        tok_d = jnp.argmax(ld, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok_p), np.asarray(tok_d))
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+def test_continuous_batching_matches_per_sequence(engine, solo_engine,
+                                                  mixed_prompts):
+    """5 mixed-length requests over 3 slots (forcing mid-flight
+    admit/retire) must produce exactly the tokens each request gets
+    when served alone."""
+    batched = engine.serve(mixed_prompts, 6)
+    for i, p in enumerate(mixed_prompts):
+        alone = solo_engine.serve([p], 6)[0]
+        np.testing.assert_array_equal(batched[i], alone)
+
+
+def test_continuous_batching_temperature_schedule_independent(
+        engine, solo_engine, mixed_prompts):
+    """Sampling keys are (request, token-index)-addressed, so even the
+    stochastic path is independent of slot scheduling."""
+    batched = engine.serve(mixed_prompts, 6, temperature=HOT, seed=11)
+    sequential = solo_engine.serve(mixed_prompts, 6, temperature=HOT, seed=11)
+    for a, b in zip(batched, sequential):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_eos_retirement_frees_slot(engine, solo_engine, mixed_prompts):
+    """Retiring on EOS mid-flight must not disturb other requests."""
+    ref = engine.serve(mixed_prompts, 6)
+    eos = int(ref[0][1])   # second token of request 0 becomes "EOS"
+    outs = engine.serve(mixed_prompts, 6, eos_id=eos)
+    for got, full in zip(outs, ref):
+        stop = np.where(full == eos)[0]
+        want = full[:stop[0] + 1] if stop.size else full
+        np.testing.assert_array_equal(got, want)
+    padded = engine.generate(
+        np.stack([p[:3] for p in mixed_prompts[:2]]), 6, eos_id=eos)
+    assert padded.shape == (2, 6)
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+def test_serve_engine_greedy_deterministic(engine, mixed_prompts):
+    prompts = np.stack([p[:3] for p in mixed_prompts[:3]])
     a = engine.generate(prompts, 8, temperature=0.0)
     b = engine.generate(prompts, 8, temperature=0.0)
     np.testing.assert_array_equal(a, b)
     assert a.shape == (3, 8)
-    assert (a >= 0).all() and (a < cfg.vocab_size).all()
+    vocab = engine.model.cfg.vocab_size
+    assert (a >= 0).all() and (a < vocab).all()
 
 
-def test_serve_engine_sampling_varies_with_seed():
-    cfg = get_config("qwen1.5-0.5b", smoke=True)
-    model = TransformerLM(cfg)
-    params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, max_len=24)
-    prompts = np.random.default_rng(1).integers(
-        0, cfg.vocab_size, (2, 8)).astype(np.int32)
-    # randomly-initialized smoke models have near-degenerate logits
-    # (one dominant token); a high temperature flattens them enough to
-    # exercise the stochastic path
-    a = engine.generate(prompts, 10, temperature=50.0, seed=1)
-    b = engine.generate(prompts, 10, temperature=50.0, seed=2)
-    assert not np.array_equal(a, b)
+def test_serve_engine_sampling_deterministic_by_seed(engine, mixed_prompts):
+    a = engine.serve(mixed_prompts, 8, temperature=HOT, seed=1)
+    b = engine.serve(mixed_prompts, 8, temperature=HOT, seed=2)
+    c = engine.serve(mixed_prompts, 8, temperature=HOT, seed=1)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, b))
+    for x, y in zip(a, c):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_first_token_respects_temperature(engine, mixed_prompts):
+    """Seed-engine bug regression: the first emitted token used to be
+    argmaxed unconditionally; it must go through the same sampler."""
+    firsts = {
+        int(engine.serve(mixed_prompts[:1], 1,
+                         temperature=HOT, seed=s)[0][0])
+        for s in range(8)
+    }
+    assert len(firsts) > 1
+
+
+def test_top_k_one_is_greedy(engine, mixed_prompts):
+    hot = engine.serve(mixed_prompts[:2], 6, temperature=HOT, top_k=1, seed=5)
+    greedy = engine.serve(mixed_prompts[:2], 6)
+    for a, b in zip(hot, greedy):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_empty_prompt_validation(qwen, engine):
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.serve([np.zeros((0,), np.int32)], 4)
+    _, model, params = qwen
+    bos_engine = ServeEngine(model, params, max_len=16, max_batch=1, bos_id=1)
+    out = bos_engine.serve([np.zeros((0,), np.int32)], 4)[0]
+    assert out.shape == (4,)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.serve([np.zeros((33,), np.int32)], 4)
+
+
+# ---------------------------------------------------------------------------
+# telemetry -> WorkloadProfile -> RTC
+# ---------------------------------------------------------------------------
+def test_telemetry_workload_profile(engine, mixed_prompts):
+    """Serving traffic must flow into the paper's energy model: the
+    engine-emitted profile is a sane decode-phase WorkloadProfile that
+    rtc.evaluate accepts."""
+    full = get_config("qwen1.5-0.5b")
+    traffic = TrafficModel.from_config(full, max_len=4096)
+    tele = ServeTelemetry(traffic)
+    engine.serve(mixed_prompts, 6, telemetry=tele)
+
+    assert tele.n_prefills == len(mixed_prompts)
+    assert tele.prefill_tokens == sum(p.shape[0] for p in mixed_prompts)
+    assert tele.tokens_generated == 6 * len(mixed_prompts)
+    assert 1 <= tele.max_live <= engine.max_batch
+
+    w = tele.workload_profile(name="qwen/serve", step_period_s=0.01)
+    assert w.regular
+    assert w.read_bytes_per_iter > traffic.param_read_bytes  # weights + KV
+    assert w.write_bytes_per_iter > 0
+    assert w.footprint_bytes == traffic.param_bytes \
+        + tele.max_live * traffic.cache_slot_bytes
+
+    spec = module(4)
+    rep = evaluate(spec, w, Variant.FULL_RTC_PLUS)
+    assert 0.0 < rep.refresh_savings <= 1.0
+
+
+def test_traffic_model_accounting():
+    """Byte constants follow directly from the config geometry."""
+    cfg = get_config("gemma2-9b")       # (local, global) pattern
+    t = TrafficModel.from_config(cfg, max_len=8192)
+    itemsize = 2
+    per_layer = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * itemsize
+    assert t.kv_token_bytes == (per_layer,) * cfg.n_layers
+    n_local = sum(cfg.layer_kind(i) == "local" for i in range(cfg.n_layers))
+    assert sorted(set(t.kv_caps)) == sorted({8192, cfg.window_size})
+    assert t.kv_caps.count(cfg.window_size) == n_local
+    # reads are capped by each layer's cache length
+    assert t.kv_read_bytes(10**9) == t.cache_slot_bytes - t.state_bytes
+    assert t.kv_read_bytes(1) == cfg.n_layers * per_layer
+    assert t.param_bytes == cfg.param_counts()["total"] * itemsize
 
 
 # ---------------------------------------------------------------------------
