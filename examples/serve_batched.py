@@ -2,12 +2,16 @@
 small model with continuous batching.
 
 Admits a queue of mixed-length prompts into the engine's batch slots
-(one-shot prefill each), decodes with temperature sampling and per-slot
-positions, retires/refills slots mid-flight, and reports throughput —
-then evaluates the DRAM refresh energy RTC would save for this exact
-serving loop from the *engine's own telemetry* (per-step weight +
-KV-cache traffic), the paper's mechanism applied to the system we just
-ran.
+(one-shot length-bucketed prefill each: prompts are right-padded to a
+small bucket ladder so a handful of lowered executables serves any
+length mix, with masked positions guaranteeing padding cannot perturb a
+generation), decodes with temperature sampling and per-slot positions,
+retires/refills slots mid-flight, and reports throughput plus the
+bucket ladder's pad-waste accounting — then evaluates the DRAM refresh
+energy RTC would save for this exact serving loop from the *engine's
+own telemetry* (per-step weight + KV-cache traffic, prefill accounted
+from true prompt lengths), the paper's mechanism applied to the system
+we just ran.
 
     PYTHONPATH=src python examples/serve_batched.py [--new-tokens 48]
 """
@@ -65,6 +69,9 @@ def main():
           f"{lens.min()}..{lens.max()}) on {args.max_batch} slots: "
           f"{n_tok} tokens in {dt:.2f}s -> {n_tok/dt:.1f} tok/s "
           f"({tele.decode_steps} decode steps, {tele.n_prefills} prefills)")
+    print(f"prefill {engine.buckets.summary()}; "
+          f"{engine.prefill_executables} lowered prefill executables "
+          f"for {len(set(int(n) for n in lens))} distinct prompt lengths")
     print(f"sample continuation: {outs[0][:10].tolist()}")
 
     # RTC on THIS loop (weights in LPDDR-class memory, edge serving):

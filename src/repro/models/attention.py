@@ -140,7 +140,7 @@ def attn_apply(params, cfg: ModelConfig, x, positions, kind: str):
 
 
 def attn_prefill(params, cfg: ModelConfig, x, positions, kind: str,
-                 cache_len: int):
+                 cache_len: int, lengths=None):
     """Full-sequence attention that also materializes the decode cache.
 
     One forward over the whole prompt (same blocked core as
@@ -149,6 +149,14 @@ def attn_prefill(params, cfg: ModelConfig, x, positions, kind: str,
     from position ``s``.  Prompts longer than the cache keep only the
     last ``cache_len`` positions (the only ones a ring buffer would
     retain), at their ring slots.
+
+    ``lengths`` ([b] int32): per-sequence real prompt lengths for
+    right-padded (length-bucketed) prefill.  The causal mask already
+    keeps padded keys out of every valid query row, so the attention
+    output below ``length`` is bit-identical to the unpadded forward;
+    the cache scatter additionally drops rows at positions >=
+    ``length`` (and below the ring horizon), leaving them zero exactly
+    as ``init_kv_cache`` would.
     """
     q, k, v = _project_qkv(params, cfg, x)
     q = rope(q, positions, cfg.rope_theta)
@@ -157,12 +165,29 @@ def attn_prefill(params, cfg: ModelConfig, x, positions, kind: str,
     out = _attend_causal(q, k, v, cfg, window)
 
     s = x.shape[1]
-    keep = min(s, cache_len)
     shape = (x.shape[0], cache_len, cfg.n_kv_heads, cfg.resolved_head_dim)
-    slots = jnp.arange(s - keep, s) % cache_len
-    ck = jnp.zeros(shape, k.dtype).at[:, slots].set(k[:, -keep:])
-    cv = jnp.zeros(shape, v.dtype).at[:, slots].set(v[:, -keep:])
-    cache = KVCache(ck, cv, jnp.asarray(keep, jnp.int32))
+    if lengths is None:
+        keep = min(s, cache_len)
+        slots = jnp.arange(s - keep, s) % cache_len
+        ck = jnp.zeros(shape, k.dtype).at[:, slots].set(k[:, -keep:])
+        cv = jnp.zeros(shape, v.dtype).at[:, slots].set(v[:, -keep:])
+        cache = KVCache(ck, cv, jnp.asarray(keep, jnp.int32))
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        p = jnp.arange(s)[None, :]
+        live = (p < lengths[:, None]) & (p >= lengths[:, None] - cache_len)
+        # dead rows scatter into a dump slot past the cache and are
+        # sliced off; live slots are unique, so `set` is deterministic.
+        slots = jnp.where(live, p % cache_len, cache_len)
+
+        def scatter(rows, slots_b):
+            buf = jnp.zeros((cache_len + 1,) + rows.shape[1:], rows.dtype)
+            return buf.at[slots_b].set(rows)[:cache_len]
+
+        ck = jax.vmap(scatter)(k, slots)
+        cv = jax.vmap(scatter)(v, slots)
+        keep = jnp.minimum(jnp.max(lengths), cache_len).astype(jnp.int32)
+        cache = KVCache(ck, cv, keep)
     return out @ params["wo"], cache
 
 

@@ -16,8 +16,39 @@ from repro.dist.axisenv import constrain
 
 __all__ = [
     "dense_init", "rmsnorm_init", "rmsnorm", "mlp_init", "mlp_apply",
-    "rope", "softcap", "embed_init",
+    "rope", "softcap", "embed_init", "causal_conv1d",
 ]
+
+
+def causal_conv1d(params, x, state=None, lengths=None):
+    """Depthwise causal conv shared by the ssm and rglru blocks.
+
+    x: [b, s, width]; params hold ``conv_w`` [k, width] / ``conv_b``.
+    ``state`` ([b, k-1, width]): carried tail for decode; None prefixes
+    zeros (prefill).  ``lengths`` ([b] int32): gather the returned tail
+    from the last ``k-1`` positions *below* each sequence's real length
+    instead of the (possibly right-padded) array tail.  Returns
+    (out [b, s, width], new_state [b, k-1, width]).
+    """
+    k = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1], :] * params["conv_w"][i] for i in range(k)
+    ) + params["conv_b"]
+    if k <= 1:
+        new_state = pad
+    elif lengths is None:
+        new_state = xp[:, -(k - 1):, :]
+    else:
+        # xp row (length + j) is input position length-(k-1)+j, or one of
+        # the leading zero rows when that position is negative.
+        idx = jnp.asarray(lengths, jnp.int32)[:, None] + jnp.arange(k - 1)
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    return out, new_state
 
 
 def _dtype(name: str):

@@ -48,7 +48,8 @@ def moe_init(key, cfg: ModelConfig, dtype) -> dict:
     return p
 
 
-def moe_apply(params, cfg: ModelConfig, x, capacity: int | None = None):
+def moe_apply(params, cfg: ModelConfig, x, capacity: int | None = None,
+              token_mask=None):
     """x: [b, seq, d] -> (y: [b, seq, d], aux_loss: scalar f32).
 
     ``capacity`` overrides the per-(virtual-)expert slot count.  Pass
@@ -56,6 +57,13 @@ def moe_apply(params, cfg: ModelConfig, x, capacity: int | None = None):
     of the sequence): serving prefill must match the decode path, which
     never drops — capacity-dropping is a train-time regularizer, not an
     inference semantic.
+
+    ``token_mask`` ([b, seq] bool): False (padded) tokens are excluded
+    from dispatch entirely — they claim no expert rank and scatter to
+    the discard slot — so per-expert occupancy is computed from *real*
+    token counts and a right-padded sequence routes real tokens exactly
+    as its unpadded twin would (padding only ever appends to the
+    exclusive-cumsum rank order, it never displaces a real token).
     """
     b, seq, d = x.shape
     e, k = cfg.n_experts, cfg.experts_per_token
@@ -85,9 +93,15 @@ def moe_apply(params, cfg: ModelConfig, x, capacity: int | None = None):
     # --- per-sequence rank within expert ---------------------------------
     flat_idx = expert_idx.reshape(b, nk)
     onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)        # [b,nk,e]
+    if token_mask is not None:
+        # [b, seq] -> [b, nk]: token t owns flat entries t*k .. t*k+k-1
+        mflat = jnp.repeat(token_mask, k, axis=1)
+        onehot = onehot * mflat[..., None].astype(jnp.int32)
     ranks = jnp.cumsum(onehot, axis=1) - onehot                  # exclusive
     pos = jnp.sum(ranks * onehot, axis=-1)                       # [b,nk]
     keep = pos < capacity
+    if token_mask is not None:
+        keep = keep & mflat
     slot = jnp.where(keep, flat_idx * capacity + pos, e * capacity)
 
     # --- dispatch: local scatter per batch element --------------------------

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.dist.axisenv import constrain
 from repro.models.config import ModelConfig
-from repro.models.layers import dense_init
+from repro.models.layers import causal_conv1d, dense_init
 
 __all__ = ["rglru_init", "rglru_apply", "rglru_prefill", "rglru_decode",
            "RGLRUCache", "init_rglru_cache"]
@@ -58,37 +58,35 @@ def _gates(params, y):
     return a, x_in
 
 
-def _conv1d(params, x, state=None):
-    k = params["conv_w"].shape[0]
-    if state is None:
-        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
-    else:
-        pad = state
-    xp = jnp.concatenate([pad, x], axis=1)
-    out = sum(
-        xp[:, i:i + x.shape[1], :] * params["conv_w"][i] for i in range(k)
-    ) + params["conv_b"]
-    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
-    return out, new_state
-
-
 def rglru_apply(params, cfg: ModelConfig, x):
     """Full-sequence recurrent block. x: [b, s, d] -> [b, s, d]."""
     y, _ = rglru_prefill(params, cfg, x)
     return y
 
 
-def rglru_prefill(params, cfg: ModelConfig, x):
+def rglru_prefill(params, cfg: ModelConfig, x, lengths=None):
     """Full-sequence recurrent block that also returns the decode cache.
 
     The associative scan already materializes the hidden state at every
     position; the cache is simply its last slice plus the conv tail, so
     serving prefill costs the same one forward as training.
+
+    ``lengths`` ([b] int32): right-padded (length-bucketed) prefill.
+    Padded steps become exact recurrence identities (a=1, input 0) and
+    the cached state/conv tail come from each sequence's real last
+    token — ``associative_scan`` prefixes are built from left-aligned
+    trees that depend only on the index, so every row below ``length``
+    (and the cache) is bit-identical to the unpadded forward.
     """
     y = constrain(x @ params["wx"], "B", None, "M")
     gate = constrain(x @ params["wgate"], "B", None, "M")
-    y, conv_state = _conv1d(params, y)
+    y, conv_state = causal_conv1d(params, y, lengths=lengths)
     a, x_in = _gates(params, y)
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        m = (jnp.arange(x.shape[1])[None, :] < lengths[:, None])[..., None]
+        a = jnp.where(m, a, 1.0)
+        x_in = jnp.where(m, x_in, 0.0)
 
     def combine(e1, e2):
         a1, h1 = e1
@@ -96,8 +94,13 @@ def rglru_prefill(params, cfg: ModelConfig, x):
         return a2 * a1, a2 * h1 + h2
 
     _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    if lengths is None:
+        h_out = h[:, -1]
+    else:
+        idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)[:, None, None]
+        h_out = jnp.take_along_axis(h, idx, axis=1)[:, 0]
     out = h.astype(x.dtype) * jax.nn.gelu(gate)
-    return out @ params["out_proj"], RGLRUCache(conv=conv_state, h=h[:, -1])
+    return out @ params["out_proj"], RGLRUCache(conv=conv_state, h=h_out)
 
 
 class RGLRUCache(NamedTuple):
@@ -118,7 +121,7 @@ def rglru_decode(params, cfg: ModelConfig, x, cache: RGLRUCache
     """One-token decode. x: [b, 1, d]."""
     y = x @ params["wx"]
     gate = x @ params["wgate"]
-    y, conv_state = _conv1d(params, y, cache.conv)
+    y, conv_state = causal_conv1d(params, y, cache.conv)
     a, x_in = _gates(params, y)
     h = a[:, 0] * cache.h + x_in[:, 0]
     out = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)

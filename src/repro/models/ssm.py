@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.dist.axisenv import constrain
 from repro.models.config import ModelConfig
-from repro.models.layers import dense_init
+from repro.models.layers import causal_conv1d, dense_init
 
 __all__ = ["ssm_init", "ssm_apply", "ssm_prefill", "ssm_decode", "SSMCache",
            "init_ssm_cache"]
@@ -48,11 +48,20 @@ def ssm_init(key, cfg: ModelConfig, dtype) -> dict:
     }
 
 
-def _ssm_inner(params, cfg: ModelConfig, xc, h0):
+def _ssm_inner(params, cfg: ModelConfig, xc, h0, mask=None, capture=None):
     """One chunk of the selective scan.
 
     xc: [b, c, di] conv+silu output; h0: [b, di, n] carried state.
     Returns (y: [b, c, di], h: [b, di, n]).
+
+    ``mask`` ([b, c] bool): False positions become exact scan
+    identities (a=1, bx=0) so the recurrent state carries through
+    padded steps unperturbed.  ``capture`` ([b] int32, requires mask):
+    additionally return the state at that chunk-local index (clamped;
+    select validity at the caller) — ``associative_scan`` builds each
+    prefix from a left-aligned tree that depends only on the index, so
+    the captured state is bit-identical to an unpadded scan ending
+    there.
     """
     b, c, di = xc.shape
     nst = cfg.ssm_state
@@ -67,6 +76,10 @@ def _ssm_inner(params, cfg: ModelConfig, xc, h0):
 
     a = jnp.exp(dt[..., None] * A)                               # [b,c,di,n]
     bx = (dt * xc.astype(jnp.float32))[..., None] * B[:, :, None, :]
+    if mask is not None:
+        m = mask[..., None, None]
+        a = jnp.where(m, a, 1.0)
+        bx = jnp.where(m, bx, 0.0)
 
     def combine(e1, e2):
         a1, b1 = e1
@@ -78,22 +91,11 @@ def _ssm_inner(params, cfg: ModelConfig, xc, h0):
     acc_a, acc_b = jax.lax.associative_scan(combine, (a, bx), axis=1)
     y = jnp.einsum("bcdn,bcn->bcd", acc_b, C)
     y = y + params["D"] * xc.astype(jnp.float32)
-    return y.astype(xc.dtype), acc_b[:, -1]
-
-
-def _conv1d(params, x, state=None):
-    """Depthwise causal conv. x: [b, s, di]; state: [b, k-1, di] or None."""
-    k = params["conv_w"].shape[0]
-    if state is None:
-        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
-    else:
-        pad = state
-    xp = jnp.concatenate([pad, x], axis=1)
-    out = sum(
-        xp[:, i:i + x.shape[1], :] * params["conv_w"][i] for i in range(k)
-    ) + params["conv_b"]
-    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
-    return out, new_state
+    if capture is None:
+        return y.astype(xc.dtype), acc_b[:, -1]
+    idx = jnp.clip(capture, 0, c - 1)[:, None, None, None]
+    h_cap = jnp.take_along_axis(acc_b, idx, axis=1)[:, 0]
+    return y.astype(xc.dtype), acc_b[:, -1], h_cap
 
 
 def ssm_apply(params, cfg: ModelConfig, x):
@@ -102,41 +104,76 @@ def ssm_apply(params, cfg: ModelConfig, x):
     return y
 
 
-def ssm_prefill(params, cfg: ModelConfig, x):
+def ssm_prefill(params, cfg: ModelConfig, x, lengths=None):
     """Full-sequence Mamba block that also returns the decode cache.
 
     Same chunked hybrid scan as training, generalized to arbitrary
     lengths (full chunks via ``lax.scan``, a shorter remainder chunk
-    processed once) so serving prompts need no padding — padding would
-    corrupt the carried recurrent state.  Returns (y [b, s, d],
-    :class:`SSMCache`) positioned after the last prompt token.
+    processed once).  Returns (y [b, s, d], :class:`SSMCache`)
+    positioned after the last prompt token.
+
+    ``lengths`` ([b] int32): right-padded (length-bucketed) prefill.
+    Padded steps become exact scan identities — the recurrent state
+    carries through unperturbed — and the cached state/conv tail are
+    taken at each sequence's real last token, so the cache is
+    bit-identical to an unpadded prefill of the same prompt (chunk
+    boundaries land at the same multiples of ``CHUNK`` either way).
     """
     b, s, d = x.shape
     di = cfg.d_inner
     xz = constrain(x @ params["in_proj"], "B", None, "M")
     xin, z = xz[..., :di], xz[..., di:]
-    xc, conv_state = _conv1d(params, xin)
+    xc, conv_state = causal_conv1d(params, xin, lengths=lengths)
     xc = jax.nn.silu(xc)
+
+    mask = None
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        mask = jnp.arange(s)[None, :] < lengths[:, None]
 
     chunk = min(CHUNK, s)
     n_full = s // chunk
     h = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    h_cap = h                     # state at position length-1 (masked mode)
     ys = []
     if n_full:
         xcs = xc[:, :n_full * chunk].reshape(b, n_full, chunk, di).swapaxes(0, 1)
+        if mask is None:
+            def step(h, xchunk):
+                y, h_next = _ssm_inner(params, cfg, xchunk, h)
+                return h_next, y
 
-        def step(h, xchunk):
-            y, h_next = _ssm_inner(params, cfg, xchunk, h)
-            return h_next, y
+            h, yfull = jax.lax.scan(step, h, xcs)
+        else:
+            ms = mask[:, :n_full * chunk].reshape(b, n_full, chunk).swapaxes(0, 1)
+            locs = lengths[None, :] - 1 - jnp.arange(n_full)[:, None] * chunk
 
-        h, yfull = jax.lax.scan(step, h, xcs)
+            def step(carry, inp):
+                h, h_cap = carry
+                xchunk, mchunk, loc = inp
+                y, h_next, cap = _ssm_inner(params, cfg, xchunk, h,
+                                            mask=mchunk, capture=loc)
+                hit = ((loc >= 0) & (loc < chunk))[:, None, None]
+                return (h_next, jnp.where(hit, cap, h_cap)), y
+
+            (h, h_cap), yfull = jax.lax.scan(step, (h, h_cap), (xcs, ms, locs))
         ys.append(yfull.swapaxes(0, 1).reshape(b, n_full * chunk, di))
     if s - n_full * chunk:
-        y_rem, h = _ssm_inner(params, cfg, xc[:, n_full * chunk:], h)
+        xr = xc[:, n_full * chunk:]
+        if mask is None:
+            y_rem, h = _ssm_inner(params, cfg, xr, h)
+        else:
+            loc = lengths - 1 - n_full * chunk
+            y_rem, h, cap = _ssm_inner(params, cfg, xr, h,
+                                       mask=mask[:, n_full * chunk:],
+                                       capture=loc)
+            hit = ((loc >= 0) & (loc < xr.shape[1]))[:, None, None]
+            h_cap = jnp.where(hit, cap, h_cap)
         ys.append(y_rem)
     y = ys[0] if len(ys) == 1 else jnp.concatenate(ys, axis=1)
     y = y * jax.nn.silu(z)
-    return y @ params["out_proj"], SSMCache(conv=conv_state, h=h)
+    h_out = h if mask is None else h_cap
+    return y @ params["out_proj"], SSMCache(conv=conv_state, h=h_out)
 
 
 # ---------------------------------------------------------------------------
@@ -161,7 +198,7 @@ def ssm_decode(params, cfg: ModelConfig, x, cache: SSMCache
     di = cfg.d_inner
     xz = x @ params["in_proj"]
     xin, z = xz[..., :di], xz[..., di:]
-    xc, conv_state = _conv1d(params, xin, cache.conv)
+    xc, conv_state = causal_conv1d(params, xin, cache.conv)
     xc = jax.nn.silu(xc)
     y, h = _ssm_inner(params, cfg, xc, cache.h)
     y = y * jax.nn.silu(z)

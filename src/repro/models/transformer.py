@@ -245,28 +245,44 @@ class TransformerLM:
                      for kind in cfg.pattern_tail)
         return {"groups": tuple(groups), "tail": tail}
 
-    def _block_prefill(self, kind, p, x, positions, max_len):
-        """Full-sequence block forward that also emits the decode cache."""
+    def _block_prefill(self, kind, p, x, positions, max_len, lengths=None):
+        """Full-sequence block forward that also emits the decode cache.
+
+        ``lengths`` ([b] int32): right-padded (length-bucketed) prefill —
+        each family freezes/ignores padded positions so rows below
+        ``length`` and the emitted cache are bit-identical to an
+        unpadded forward (see the per-family prefill docstrings).
+        """
         cfg = self.cfg
         if kind in ("global", "local"):
             h, c = attn.attn_prefill(p["attn"], cfg, rmsnorm(p["ln1"], x),
                                      positions, kind,
-                                     cfg.decode_cache_len(kind, max_len))
+                                     cfg.decode_cache_len(kind, max_len),
+                                     lengths=lengths)
             x = x + h
             hh = rmsnorm(p["ln2"], x)
             if cfg.n_experts:
                 # dropless dispatch: prefill must agree with decode,
-                # which never capacity-drops (seq = 1).
+                # which never capacity-drops (seq = 1).  The static slot
+                # bound is the (padded) sequence length; with a token
+                # mask the occupancy actually dispatched is the real
+                # (unpadded) token count.
+                mask = None if lengths is None \
+                    else positions < lengths[:, None]
                 y, _ = moe_mod.moe_apply(p["moe"], cfg, hh,
-                                         capacity=hh.shape[1])
+                                         capacity=hh.shape[1],
+                                         token_mask=mask)
             else:
                 y = mlp_apply(p["mlp"], hh, cfg.mlp_activation)
             x = x + y
         elif kind == "ssm":
-            h, c = ssm_mod.ssm_prefill(p["ssm"], cfg, rmsnorm(p["ln1"], x))
+            h, c = ssm_mod.ssm_prefill(p["ssm"], cfg, rmsnorm(p["ln1"], x),
+                                       lengths=lengths)
             x = x + h
         elif kind == "rglru":
-            h, c = rglru_mod.rglru_prefill(p["rec"], cfg, rmsnorm(p["ln1"], x))
+            h, c = rglru_mod.rglru_prefill(p["rec"], cfg,
+                                           rmsnorm(p["ln1"], x),
+                                           lengths=lengths)
             x = x + h
             x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x),
                               cfg.mlp_activation)
@@ -274,7 +290,7 @@ class TransformerLM:
             raise ValueError(kind)
         return x, c
 
-    def prefill(self, params, tokens, max_len: int):
+    def prefill(self, params, tokens, max_len: int, lengths=None):
         """One-shot serving prefill: full-sequence forward + decode cache.
 
         tokens: [b, s] int32 with positions 0..s-1.  Returns
@@ -282,17 +298,34 @@ class TransformerLM:
         exactly the ``init_cache(b, max_len)`` structure, positioned so
         ``decode_step(..., pos=s)`` continues the sequence.  Replaces an
         O(s)-dispatch decode-step prefill with ONE lowered forward.
+
+        ``lengths`` ([b] int32): per-sequence real prompt lengths for
+        right-padded (length-bucketed) prefill — one executable serves
+        every prompt length in a bucket.  Padding cannot perturb the
+        result: attention masks padded keys causally and skips their
+        cache rows, recurrent (ssm/rglru) state carries through padded
+        steps as an exact identity, MoE dispatch excludes padded
+        tokens, and the logits/cache hand-off is taken at ``length-1``
+        per sequence (``decode_step(..., pos=length)`` continues).  The
+        returned logits and every cache row below ``length`` are
+        bit-identical to ``prefill(params, tokens[:, :length], max_len)``
+        as long as both sides take the same attention core path (padded
+        and real length on the same side of the blocked-attention
+        threshold, ``2*attention.QBLOCK``).
         """
         cfg = self.cfg
         x = self._embed(params, tokens)
         x = constrain(x, "B", "S", None)
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if lengths is not None:
+            lengths = jnp.asarray(lengths, jnp.int32)
 
         def group_body(x, gp):
             cs = []
             for i, kind in enumerate(cfg.attn_pattern):
-                x, c = self._block_prefill(kind, gp[i], x, positions, max_len)
+                x, c = self._block_prefill(kind, gp[i], x, positions, max_len,
+                                           lengths=lengths)
                 x = constrain(x, "B", "S", None)
                 cs.append(c)
             return x, tuple(cs)
@@ -309,11 +342,16 @@ class TransformerLM:
         tail_caches = []
         for i, kind in enumerate(cfg.pattern_tail):
             x, c = self._block_prefill(kind, params["tail"][i], x, positions,
-                                       max_len)
+                                       max_len, lengths=lengths)
             x = constrain(x, "B", "S", None)
             tail_caches.append(c)
         cache = {"groups": gcaches, "tail": tuple(tail_caches)}
-        logits = self._unembed(params, x[:, -1:])[:, 0, :]
+        if lengths is None:
+            last = x[:, -1:]
+        else:
+            idx = jnp.clip(lengths - 1, 0, s - 1)[:, None, None]
+            last = jnp.take_along_axis(x, idx, axis=1)
+        logits = self._unembed(params, last)[:, 0, :]
         return logits, cache
 
     def _block_decode(self, kind, p, c, x, pos):

@@ -1,15 +1,17 @@
 """Serving stack: sharded step builders, the continuous-batching engine,
 and RTC traffic telemetry.
 
-``engine`` owns the compute (one-shot prefill, per-slot-position decode,
-unified sampling); ``telemetry`` owns the accounting (engine events ->
-DRAM bytes -> :class:`repro.core.workload.WorkloadProfile`), which is
-how serving traffic reaches the paper's RTC policy engine.
+``engine`` owns the compute (length-bucketed masked prefill, per-slot-
+position decode, unified per-request sampling); ``telemetry`` owns the
+accounting (engine events -> DRAM bytes ->
+:class:`repro.core.workload.WorkloadProfile`), which is how serving
+traffic reaches the paper's RTC policy engine.
 """
-from repro.serve.engine import (Request, ServeEngine, build_decode_step,
-                                build_prefill_step, cache_specs)
+from repro.serve.engine import (PrefillBuckets, Request, ServeEngine,
+                                build_decode_step, build_prefill_step,
+                                cache_specs)
 from repro.serve.telemetry import ServeTelemetry, TrafficModel
 
-__all__ = ["Request", "ServeEngine", "build_decode_step",
+__all__ = ["PrefillBuckets", "Request", "ServeEngine", "build_decode_step",
            "build_prefill_step", "cache_specs", "ServeTelemetry",
            "TrafficModel"]

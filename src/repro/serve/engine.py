@@ -42,7 +42,7 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import TransformerLM
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
-           "Request", "ServeEngine"]
+           "PrefillBuckets", "Request", "ServeEngine"]
 
 
 def cache_specs(model: TransformerLM, batch: int, cache_len: int,
@@ -91,7 +91,8 @@ def cache_specs(model: TransformerLM, batch: int, cache_len: int,
 def build_prefill_step(model: TransformerLM, mesh: Mesh,
                        policy: ShardingPolicy, donate: bool = False,
                        last_only: bool = True,
-                       cache_len: Optional[int] = None):
+                       cache_len: Optional[int] = None,
+                       batch: Optional[int] = None):
     """Full-sequence forward with sharded params/batch.
 
     ``last_only`` (production default): unembed only the final position
@@ -99,21 +100,37 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
     logits (4.2 GiB/device of pure output for gemma2-9b @32k).
 
     ``cache_len`` (serving): also materialize the decode cache — the
-    jitted function then lowers ``model.prefill`` and returns
-    (last-position logits [b, vocab] f32, cache) with the exact
-    ``init_cache(b, cache_len)`` structure, ready for
-    ``build_decode_step`` to continue at position ``prompt_len``.
+    jitted function then lowers ``model.prefill`` and takes a third
+    ``lengths`` argument ([b] int32, real prompt lengths of the
+    right-padded ``tokens``), returning (logits at ``length-1``
+    [b, vocab] f32, cache) with the exact ``init_cache(b, cache_len)``
+    structure, ready for ``build_decode_step`` to continue at position
+    ``length``.
+
+    ``batch``: the token batch size this step will be fed (the serving
+    engine prefills one request at a time).  A batch of 1 replicates
+    the batch dimension instead of sharding it — a size-1 dim cannot be
+    laid out over a >1-device data axis.
     """
     pspecs = param_specs(jax.eval_shape(
         lambda: model.init(jax.random.key(0))), policy)
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                        is_leaf=lambda x: isinstance(x, P))
-    tok_sh = NamedSharding(mesh, P(policy.batch_spec, policy.seq_axis))
+    bspec = policy.batch_spec if (batch is None or batch > 1) else None
+    tok_sh = NamedSharding(mesh, P(bspec, policy.seq_axis))
+
+    if cache_len is not None:
+        def prefill_cached(params, tokens, lengths):
+            with axis_env(policy, mesh=mesh):
+                return model.prefill(params, tokens, cache_len,
+                                     lengths=lengths)
+
+        len_sh = NamedSharding(mesh, P(bspec))
+        return jax.jit(prefill_cached,
+                       in_shardings=(psh, tok_sh, len_sh)), psh, tok_sh
 
     def prefill(params, tokens):
         with axis_env(policy, mesh=mesh):
-            if cache_len is not None:
-                return model.prefill(params, tokens, cache_len)
             if last_only:
                 hidden, _ = model.hidden(params, tokens=tokens)
                 return model._unembed(params, hidden[:, -1:])
@@ -168,6 +185,83 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# Prefill bucketing policy
+# ---------------------------------------------------------------------------
+class PrefillBuckets:
+    """Length-bucket ladder for prefill, with pad-waste accounting.
+
+    Prompts are right-padded up to the smallest ladder entry that fits
+    (best-fit), so the number of distinct prefill shapes — and therefore
+    the number of lowered prefill executables — is bounded by
+    ``len(ladder)`` regardless of the traffic's length distribution.
+    Entries above ``max_len`` are dropped and ``max_len`` itself is
+    always the top rung (every admissible prompt fits somewhere).
+
+    Counters accumulate across serve calls: ``hits`` per bucket,
+    ``real_tokens`` vs ``padded_tokens``, and ``pad_waste`` (the
+    fraction of padded prefill positions that carried no prompt token)
+    — the knob to watch when tuning a ladder against a traffic mix.
+    """
+
+    def __init__(self, ladder: Sequence[int], max_len: Optional[int] = None):
+        rungs = sorted({int(x) for x in ladder})
+        if not rungs or rungs[0] < 1:
+            raise ValueError(f"bucket ladder must be positive ints: {ladder}")
+        if max_len is not None:
+            rungs = [x for x in rungs if x < max_len] + [int(max_len)]
+        self.ladder: Tuple[int, ...] = tuple(rungs)
+        self.hits = {x: 0 for x in self.ladder}
+        self.real_tokens = 0
+        self.padded_tokens = 0
+
+    @classmethod
+    def powers_of_two(cls, max_len: int, min_bucket: int = 8
+                      ) -> "PrefillBuckets":
+        """Default ladder: min_bucket, 2*min_bucket, ... capped at max_len."""
+        if min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
+        rungs, b = [], int(min_bucket)
+        while b < max_len:
+            rungs.append(b)
+            b *= 2
+        return cls(rungs + [int(max_len)], max_len=max_len)
+
+    def bucket_for(self, plen: int) -> int:
+        """Smallest rung that fits ``plen`` (best-fit)."""
+        for b in self.ladder:
+            if plen <= b:
+                return b
+        raise ValueError(
+            f"prompt length {plen} exceeds top bucket {self.ladder[-1]}")
+
+    def record(self, plen: int, bucket: int) -> None:
+        self.hits[bucket] += 1
+        self.real_tokens += int(plen)
+        self.padded_tokens += int(bucket)
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of prefilled positions that were padding."""
+        if not self.padded_tokens:
+            return 0.0
+        return 1.0 - self.real_tokens / self.padded_tokens
+
+    def stats(self) -> dict:
+        return {"ladder": self.ladder,
+                "hits": dict(self.hits),
+                "real_tokens": self.real_tokens,
+                "padded_tokens": self.padded_tokens,
+                "pad_waste": self.pad_waste}
+
+    def summary(self) -> str:
+        hits = " ".join(f"{b}:{n}" for b, n in self.hits.items() if n)
+        return (f"buckets {list(self.ladder)} hits [{hits}] "
+                f"pad waste {self.pad_waste:.1%} "
+                f"({self.padded_tokens - self.real_tokens} of "
+                f"{self.padded_tokens} prefill positions)")
+
+
+# ---------------------------------------------------------------------------
 # Batched serving engine
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -176,10 +270,15 @@ class Request:
 
     ``eq=False``: the ndarray prompt makes generated equality/hash
     raise; identity comparison is the useful semantic for requests.
+    Sampling params live on the request — mixed greedy/temperature
+    traffic batches together, each request keeping its own schedule-
+    independent generation.
     """
     req_id: int
     prompt: np.ndarray          # [plen] int32, plen >= 1
     max_new_tokens: int
+    temperature: float = 0.0
+    top_k: Optional[int] = None
 
 
 class _Slot:
@@ -204,24 +303,50 @@ class ServeEngine:
     tokens: sampling keys are a pure function of (seed, request id,
     token index).
 
-    Compile note: the prefill function retraces per distinct prompt
-    length (exact-length lowering keeps recurrent-state hand-off
-    trivially correct — right-padding would feed pad tokens into
-    ssm/rglru state).  Length-bucketed prefill with masked positions is
-    the production fix and is tracked in the ROADMAP.
+    Compile note: prompts are right-padded up to a
+    :class:`PrefillBuckets` ladder and prefilled through the masked
+    ``model.prefill(..., lengths=...)`` path, so the number of lowered
+    prefill executables is bounded by the ladder size regardless of the
+    traffic's length distribution — and padding provably cannot perturb
+    a generation (attention masks padded keys, recurrent ssm/rglru
+    state carries through padded steps as an exact identity, MoE
+    dispatch excludes padded tokens, and the logits/cache hand-off is
+    taken at ``length-1``).
+
+    Sampling params (``temperature`` / ``top_k``) are per *request*:
+    ``serve`` accepts either one value for the whole call or a
+    per-prompt sequence, and a mixed greedy+stochastic batch reproduces
+    each request's solo generation bit-for-bit.
     """
 
     def __init__(self, model: TransformerLM, params: dict,
                  max_len: int = 256, max_batch: int = 8,
                  eos_id: Optional[int] = None, bos_id: Optional[int] = None,
                  mesh: Optional[Mesh] = None,
-                 policy: Optional[ShardingPolicy] = None):
+                 policy: Optional[ShardingPolicy] = None,
+                 buckets=None):
         self.model = model
         self.params = params
         self.max_len = int(max_len)
         self.max_batch = int(max_batch)
         self.eos_id = eos_id
         self.bos_id = bos_id
+        if buckets is None:
+            buckets = PrefillBuckets.powers_of_two(self.max_len)
+        elif not isinstance(buckets, PrefillBuckets):
+            buckets = PrefillBuckets(buckets, max_len=self.max_len)
+        if buckets.ladder[-1] != self.max_len:
+            # a short ladder leaves admissible prompts (plen <= max_len)
+            # with no bucket and fails mid-serve after other requests
+            # already ran; a tall one lowers shapes past the cache that
+            # only ever carry masked padding.  The clipped constructor
+            # always tops out at exactly max_len.
+            raise ValueError(
+                f"bucket ladder top {buckets.ladder[-1]} != engine "
+                f"max_len {self.max_len}: pass the raw ladder (or build "
+                f"with PrefillBuckets(ladder, max_len=...)) so it is "
+                f"clipped and capped to the engine")
+        self.buckets = buckets
         if mesh is None:
             mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                         ("data", "model"))
@@ -229,41 +354,77 @@ class ServeEngine:
             policy = ShardingPolicy.for_mesh(mesh)
         self.mesh, self.policy = mesh, policy
         self._prefill = build_prefill_step(
-            model, mesh, policy, cache_len=self.max_len)[0]
-        self._decode = build_decode_step(
+            model, mesh, policy, cache_len=self.max_len, batch=1)[0]
+        self._decode, _, self._cache_sh = build_decode_step(
             model, mesh, policy, batch=self.max_batch,
-            cache_len=self.max_len, per_slot_pos=True)[0]
-        self._insert = jax.jit(self._insert_cache)
+            cache_len=self.max_len, per_slot_pos=True)
+        # pin the insert output to the decode step's cache shardings, so
+        # the slot-update round trip stays layout-stable on real meshes
+        # (decode donates and re-emits the same placement).
+        self._insert = jax.jit(self._insert_cache,
+                               out_shardings=self._cache_sh)
         self._keys = jax.jit(jax.vmap(
             lambda base, r, i: jax.random.fold_in(jax.random.fold_in(base, r), i),
             in_axes=(None, 0, 0)))
-        self._samplers = {}
+        self._sample = jax.jit(self._sample_fn, static_argnums=(4,))
+
+    @property
+    def prefill_executables(self) -> int:
+        """Distinct lowered prefill executables (one per bucket shape
+        traced) — the quantity the ladder bounds.  Read from the jit
+        cache when jax exposes it (private introspection, so a getattr
+        fallback counts buckets hit instead — equal whenever every
+        recorded bucket was lowered by this engine instance)."""
+        cache_size = getattr(self._prefill, "_cache_size", None)
+        if cache_size is not None:
+            return int(cache_size())
+        return sum(1 for n in self.buckets.hits.values() if n)
 
     # ------------------------------------------------------------- sampling
-    def _sampler(self, top_k: Optional[int]):
-        """Jitted unified sampler: greedy / temperature / top-k.
+    @staticmethod
+    def _sample_fn(logits, keys, temperature, top_k, use_top_k):
+        """Unified greedy / temperature / top-k sampler, vectorized over
+        per-request params.
 
-        Every emitted token — including the one sampled from prefill
-        logits — goes through this one function, so ``temperature``
-        applies from the first token (the seed engine argmaxed it).
+        logits [n, vocab]; temperature [n] f32; top_k [n] int32 (the
+        vocab size means "no top-k filter": the kth threshold is then
+        the row minimum, which keeps every logit bit-unchanged — so a
+        no-filter row draws identically whether or not its batch
+        company triggered the filter).  ``use_top_k`` is static: calls
+        where NO live request filters skip the O(vocab log vocab) row
+        sort entirely (the default greedy/temperature hot path).  Every
+        emitted token — including the one sampled from prefill logits —
+        goes through this one row-wise function, so params apply from
+        the first token and a row's draw is independent of its batch
+        company.
         """
-        if top_k is not None and top_k < 1:
-            raise ValueError(f"top_k must be >= 1, got {top_k}")
-        if top_k in self._samplers:
-            return self._samplers[top_k]
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) \
+            / jnp.maximum(temperature, 1e-6)[:, None]
+        if use_top_k:
+            vocab = logits.shape[-1]
+            srt = jnp.sort(scaled, axis=-1)
+            kth = jnp.take_along_axis(
+                srt, (vocab - jnp.clip(top_k, 1, vocab))[:, None], axis=-1)
+            scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+        drawn = jax.vmap(jax.random.categorical)(keys, scaled)
+        return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)
 
-        def sample(logits, keys, temperature):
-            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
-            if top_k is not None and top_k < logits.shape[-1]:
-                kth = jnp.sort(scaled, axis=-1)[:, -top_k][:, None]
-                scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
-            drawn = jax.vmap(jax.random.categorical)(keys, scaled)
-            return jnp.where(temperature > 0, drawn.astype(jnp.int32), greedy)
+    @staticmethod
+    def _per_request(value, n: int, name: str) -> list:
+        """Broadcast a scalar-or-sequence sampling param to one per request.
 
-        fn = jax.jit(sample)
-        self._samplers[top_k] = fn
-        return fn
+        ``np.ndim == 0`` (not ``np.isscalar``) so 0-d numpy/jax scalars
+        — e.g. a temperature coming out of a jax computation — keep
+        working as call-wide values.
+        """
+        if value is None or np.ndim(value) == 0:
+            return [value] * n
+        vals = list(value)
+        if len(vals) != n:
+            raise ValueError(
+                f"{name}: got {len(vals)} values for {n} prompts")
+        return vals
 
     # ---------------------------------------------------------- cache insert
     @staticmethod
@@ -305,33 +466,54 @@ class ServeEngine:
               telemetry=None) -> List[np.ndarray]:
         """Serve a batch of requests with continuous batching.
 
-        prompts: sequence of 1-D int32 token arrays (mixed lengths fine;
-        empty prompts require ``bos_id``).  Returns the generated tokens
-        of each request, in input order (each up to ``max_new_tokens``,
-        shorter on EOS or cache exhaustion).  ``eos_id`` overrides the
-        engine default for this call.  ``telemetry`` is an optional sink
-        with ``record_prefill(plen, dt)`` / ``record_decode(ctx_lengths,
-        dt)`` hooks — see :class:`repro.serve.telemetry.ServeTelemetry`.
+        prompts: sequence of 1-D int32 token arrays (mixed lengths fine
+        — each is padded up to the engine's :class:`PrefillBuckets`
+        ladder; empty prompts require ``bos_id``).  Returns the
+        generated tokens of each request, in input order (each up to
+        ``max_new_tokens``, shorter on EOS or cache exhaustion).
+
+        ``temperature`` / ``top_k`` are per *request*: pass one value
+        for the whole call, or a sequence with one entry per prompt
+        (greedy and stochastic requests batch together; each request's
+        generation matches its solo serve bit-for-bit).  ``eos_id``
+        overrides the engine default for this call.  ``telemetry`` is an
+        optional sink with ``record_prefill(plen, dt, padded_len)`` /
+        ``record_decode(ctx_lengths, dt)`` hooks — see
+        :class:`repro.serve.telemetry.ServeTelemetry`; prefill traffic
+        is accounted from true prompt lengths, never padded ones.
         """
         if max_new_tokens < 0:
             raise ValueError("max_new_tokens must be >= 0")
         eos = self.eos_id if eos_id is None else eos_id
-        requests = [Request(i, self._admit_prompt(p), max_new_tokens)
-                    for i, p in enumerate(prompts)]
+        vocab = self.model.cfg.vocab_size
+        temps = self._per_request(temperature, len(prompts), "temperature")
+        top_ks = self._per_request(top_k, len(prompts), "top_k")
+        for tk in top_ks:
+            if tk is not None and tk < 1:
+                raise ValueError(f"top_k must be >= 1, got {tk}")
+        requests = [Request(i, self._admit_prompt(p), max_new_tokens,
+                            temperature=float(t),
+                            top_k=vocab if tk is None else int(tk))
+                    for i, (p, t, tk) in enumerate(zip(prompts, temps, top_ks))]
         outputs: List[Optional[np.ndarray]] = [None] * len(requests)
         if max_new_tokens == 0:
             return [np.zeros((0,), np.int32) for _ in requests]
 
         B = self.max_batch
-        sample = self._sampler(top_k)
+        use_top_k = any(r.top_k != vocab for r in requests)
+
+        def sample(logits, keys, temps_, topks_):
+            return self._sample(logits, keys, temps_, topks_, use_top_k)
+
         base = jax.random.key(seed)
-        temp = float(temperature)
         cache = self.model.init_cache(B, self.max_len)
         slots: List[Optional[_Slot]] = [None] * B
         tok_vec = np.zeros((B,), np.int32)
         pos_vec = np.zeros((B,), np.int32)
         req_vec = np.zeros((B,), np.int32)
         emit_vec = np.zeros((B,), np.int32)
+        temp_vec = np.zeros((B,), np.float32)
+        topk_vec = np.full((B,), vocab, np.int32)
         pending = collections.deque(requests)
 
         def retire(s: int):
@@ -352,21 +534,29 @@ class ServeEngine:
                 while slots[s] is None and pending:
                     req = pending.popleft()
                     plen = req.prompt.shape[0]
+                    bucket = self.buckets.bucket_for(plen)
+                    padded = np.zeros((1, bucket), np.int32)
+                    padded[0, :plen] = req.prompt
                     t0 = time.perf_counter()
-                    logits, one = self._prefill(self.params,
-                                                jnp.asarray(req.prompt[None]))
+                    logits, one = self._prefill(
+                        self.params, jnp.asarray(padded),
+                        jnp.asarray([plen], jnp.int32))
                     cache = self._insert(cache, one, jnp.asarray(s, jnp.int32))
                     key = self._keys(base, np.asarray([req.req_id], np.int32),
                                      np.zeros((1,), np.int32))
-                    first = int(np.asarray(
-                        sample(logits, key, jnp.float32(temp)))[0])
+                    first = int(np.asarray(sample(
+                        logits, key,
+                        np.asarray([req.temperature], np.float32),
+                        np.asarray([req.top_k], np.int32)))[0])
+                    self.buckets.record(plen, bucket)
                     if telemetry is not None:
                         telemetry.record_prefill(
-                            plen, time.perf_counter() - t0)
+                            plen, time.perf_counter() - t0, padded_len=bucket)
                     st = _Slot(req, pos=plen, first_token=first)
                     slots[s] = st
                     tok_vec[s], pos_vec[s] = first, plen
                     req_vec[s], emit_vec[s] = req.req_id, st.emitted
+                    temp_vec[s], topk_vec[s] = req.temperature, req.top_k
                     if finished(st, first):
                         retire(s)           # keep admitting into this slot
 
@@ -379,7 +569,8 @@ class ServeEngine:
                                          jnp.asarray(tok_vec),
                                          jnp.asarray(pos_vec))
             keys = self._keys(base, req_vec, emit_vec)
-            toks = np.asarray(sample(logits, keys, jnp.float32(temp)))
+            toks = np.asarray(sample(logits, keys, jnp.asarray(temp_vec),
+                                     jnp.asarray(topk_vec)))
             if telemetry is not None:
                 telemetry.record_decode(ctx, time.perf_counter() - t0)
             for s in active:

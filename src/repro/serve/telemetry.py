@@ -107,7 +107,8 @@ class ServeTelemetry:
         self.traffic = traffic
         self.ctx_scale = float(ctx_scale)
         self.n_prefills = 0
-        self.prefill_tokens = 0
+        self.prefill_tokens = 0         # TRUE prompt tokens prefetched
+        self.prefill_padded_tokens = 0  # positions incl. bucket padding
         self.prefill_time_s = 0.0
         self.decode_steps = 0
         self.decode_time_s = 0.0
@@ -118,11 +119,30 @@ class ServeTelemetry:
         self._write_bytes = 0.0        # KV appends + recurrent state writes
 
     # ------------------------------------------------------------- recording
-    def record_prefill(self, plen: int, dt: float = 0.0) -> None:
+    def record_prefill(self, plen: int, dt: float = 0.0,
+                       padded_len: Optional[int] = None) -> None:
+        """One prefill of ``plen`` TRUE prompt tokens.
+
+        ``padded_len``: the bucket size actually lowered (>= plen) when
+        the engine length-buckets prefill.  Traffic and the RTC profile
+        are always accounted from ``plen`` — padding is compute the
+        model masks out, not DRAM-resident prompt state — while the
+        padded total is kept so the pad overhead stays visible
+        (:attr:`prefill_pad_waste`).
+        """
         self.n_prefills += 1
         self.prefill_tokens += int(plen)
+        self.prefill_padded_tokens += int(plen if padded_len is None
+                                          else padded_len)
         self.prefill_time_s += dt
         self.tokens_generated += 1   # first token samples off prefill logits
+
+    @property
+    def prefill_pad_waste(self) -> float:
+        """Fraction of prefilled positions that were bucket padding."""
+        if not self.prefill_padded_tokens:
+            return 0.0
+        return 1.0 - self.prefill_tokens / self.prefill_padded_tokens
 
     def record_decode(self, ctx_lengths: Sequence[int], dt: float = 0.0) -> None:
         """One batched decode step over live slots with the given

@@ -1,0 +1,76 @@
+"""Regression pin for the Fig. 11 RTC-vs-SmartRefresh comparison
+(benchmarks/fig11_smartrefresh).
+
+fig10 has been pinned since PR 1; this pins the other calibrated
+figure.  Two layers of assertion per co-run CNN mix on the 8 GB module:
+
+* a tight pin (±0.02) on the CURRENT calibration of both variants'
+  DRAM-energy savings, so silent drift in the energy/refresh models is
+  caught by CI;
+* the paper's qualitative Section VI-B claim: full-RTC beats
+  SmartRefresh on every mix, by a margin that grows as the mix gets
+  lighter (LeNet-only at the top).  The quantitative delta currently
+  spans 0.50..1.00 against the paper's ~0.28..0.96 text anchor — the
+  calibration gap is tracked in the benchmark docstring, so only the
+  ordering and positivity are treated as paper-anchored here.
+"""
+import pytest
+
+from repro.core.allocator import allocate_workload
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import MODULE_8GB
+from repro.core.rtc import Variant, evaluate
+from repro.core.workload import from_cnn, merge
+
+# mix label -> ((cnn, count), ...) per Section VI-B, 60 fps co-run
+MIXES = {
+    "LN": (("lenet", 1),),
+    "GN": (("googlenet", 1),),
+    "AN": (("alexnet", 1),),
+    "AN+GN": (("alexnet", 1), ("googlenet", 1)),
+    "2AN+2GN+LN": (("alexnet", 2), ("googlenet", 2), ("lenet", 1)),
+}
+
+# mix -> (full-RTC savings, SmartRefresh savings) current calibration
+EXPECTED = {
+    "LN": (0.975, -0.022),
+    "GN": (0.906, -0.015),
+    "AN": (0.738, 0.005),
+    "AN+GN": (0.695, 0.008),
+    "2AN+2GN+LN": (0.530, 0.026),
+}
+CALIBRATION_TOL = 0.02
+
+
+def _savings(label):
+    ws = []
+    for cnn, n in MIXES[label]:
+        ws.extend([from_cnn(CNN_ZOO[cnn], fps=60)] * n)
+    wl = merge(label, *ws)
+    alloc = allocate_workload(MODULE_8GB, {"data": wl.footprint_bytes})
+    rtc = evaluate(MODULE_8GB, wl, Variant.FULL_RTC, alloc)
+    smart = evaluate(MODULE_8GB, wl, Variant.SMART_REFRESH, alloc)
+    return rtc.dram_savings, smart.dram_savings
+
+
+@pytest.mark.parametrize("label", sorted(MIXES))
+def test_fig11_savings_pinned(label):
+    rtc, smart = _savings(label)
+    exp_rtc, exp_smart = EXPECTED[label]
+    assert rtc == pytest.approx(exp_rtc, abs=CALIBRATION_TOL), (
+        f"{label}: full-RTC drifted from pinned calibration: "
+        f"{rtc:.3f} vs {exp_rtc:.3f}")
+    assert smart == pytest.approx(exp_smart, abs=CALIBRATION_TOL), (
+        f"{label}: SmartRefresh drifted from pinned calibration: "
+        f"{smart:.3f} vs {exp_smart:.3f}")
+
+
+def test_fig11_rtc_beats_smartrefresh_on_every_mix():
+    """Paper Section VI-B: RTC saves more DRAM energy than SmartRefresh
+    for every co-run mix, with the margin largest for LeNet-only."""
+    deltas = {label: rtc - smart
+              for label, (rtc, smart) in
+              ((lab, _savings(lab)) for lab in MIXES)}
+    assert all(d > 0 for d in deltas.values()), deltas
+    assert deltas["LN"] == max(deltas.values())
+    assert deltas["2AN+2GN+LN"] == min(deltas.values())

@@ -1,0 +1,246 @@
+"""Cross-arch padding-equivalence suite for length-bucketed prefill.
+
+The contract under test: right-padding a prompt up to a bucket and
+prefilling through ``model.prefill(..., lengths=...)`` is *bit-identical*
+to prefilling the unpadded prompt — the logits at ``length-1``, the
+first sampled token, every cache/recurrent-state row below ``length``
+(attention KV rows, ssm/rglru conv tails and hidden states), and the
+decode continuation from the handed-off cache.  This is what lets
+:class:`repro.serve.ServeEngine` bound its number of lowered prefill
+executables by the bucket-ladder size instead of the traffic's length
+distribution (the paper's "predictable access pattern" requirement at
+the compiler level) without perturbing a single generation.
+
+Exercised per family: causal + sliding-window attention (ring and
+append caches), Mamba chunked selective scan, RG-LRU associative scan,
+and dropless-MoE dispatch — i.e. all 10 ``repro.configs`` entries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.transformer import TransformerLM
+from repro.serve import PrefillBuckets, ServeEngine
+
+MAX_LEN = 24          # decode-cache length handed to model.prefill
+MAX_PLEN = 12         # property-test prompt lengths: 1..MAX_PLEN
+LADDER = (4, 8, 16)   # test bucket ladder (smallest-fit selection)
+
+_CACHED = {}
+
+
+def _arch(arch):
+    """(model, params, jitted prefill, jitted decode) — cached per arch
+    so property examples reuse executables instead of recompiling."""
+    if arch not in _CACHED:
+        cfg = get_config(arch, smoke=True)
+        model = TransformerLM(cfg)
+        params = model.init(jax.random.key(0))
+        prefill = jax.jit(
+            lambda p, t, n=None: model.prefill(p, t, MAX_LEN, lengths=n))
+        _CACHED[arch] = (model, params, prefill, jax.jit(model.decode_step))
+    return _CACHED[arch]
+
+
+def _assert_trees_equal(ref, got, msg):
+    leaves_r = jax.tree_util.tree_flatten_with_path(ref)[0]
+    leaves_g = jax.tree_util.tree_leaves(got)
+    assert len(leaves_r) == len(leaves_g)
+    for (path, a), b in zip(leaves_r, leaves_g):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{msg}: cache leaf {jax.tree_util.keystr(path)}")
+
+
+def _check_arch(arch, plen):
+    model, params, prefill, decode = _arch(arch)
+    cfg = model.cfg
+    bucket = next(b for b in LADDER if plen <= b)
+    rng = np.random.default_rng(plen)
+    toks = rng.integers(0, cfg.vocab_size, (2, plen)).astype(np.int32)
+    padded = np.zeros((2, bucket), np.int32)
+    padded[:, :plen] = toks
+    lengths = jnp.full((2,), plen, jnp.int32)
+
+    ref_logits, ref_cache = prefill(params, jnp.asarray(toks))
+    pad_logits, pad_cache = prefill(params, jnp.asarray(padded), lengths)
+
+    # logits at length-1 and the first (greedy) sampled token
+    np.testing.assert_array_equal(
+        np.asarray(ref_logits), np.asarray(pad_logits),
+        err_msg=f"{arch} plen={plen} bucket={bucket}: prefill logits")
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(ref_logits, -1)),
+        np.asarray(jnp.argmax(pad_logits, -1)),
+        err_msg=f"{arch} plen={plen}: first token")
+
+    # every cache row: rows below length hold the prompt state, rows at
+    # or above it are zero on BOTH sides (masked scatter == fresh cache)
+    _assert_trees_equal(ref_cache, pad_cache,
+                        f"{arch} plen={plen} bucket={bucket}")
+
+    # the hand-off continues identically: greedy-decode a couple of
+    # steps from each cache, starting at pos=length
+    tok_r = jnp.argmax(ref_logits, -1).astype(jnp.int32)
+    tok_p = jnp.argmax(pad_logits, -1).astype(jnp.int32)
+    cache_r, cache_p = ref_cache, pad_cache
+    for i in range(2):
+        lg_r, cache_r = decode(params, cache_r, tok_r, jnp.asarray(plen + i))
+        lg_p, cache_p = decode(params, cache_p, tok_p, jnp.asarray(plen + i))
+        np.testing.assert_array_equal(
+            np.asarray(lg_r), np.asarray(lg_p),
+            err_msg=f"{arch} plen={plen}: decode step {i} logits")
+        tok_r = jnp.argmax(lg_r, -1).astype(jnp.int32)
+        tok_p = jnp.argmax(lg_p, -1).astype(jnp.int32)
+
+
+@given(plen=st.integers(1, MAX_PLEN))
+@settings(max_examples=4, deadline=None)
+def test_padded_prefill_bit_identical_all_archs(plen):
+    """Property: for every configured arch, bucket-padded prefill is
+    bit-identical to unpadded prefill (logits at length-1, first token,
+    all cache rows, decode continuation)."""
+    for arch in ARCH_IDS:
+        _check_arch(arch, plen)
+
+
+def test_mixed_lengths_one_executable_per_bucket():
+    """One batched padded prefill serves MIXED real lengths: the length
+    vector is a runtime argument, not part of the lowered shape."""
+    model, params, prefill, _ = _arch("qwen1.5-0.5b")
+    cfg = model.cfg
+    rng = np.random.default_rng(0)
+    plens = [3, 7, 2]
+    bucket = 8
+    padded = np.zeros((len(plens), bucket), np.int32)
+    rows = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in plens]
+    for i, r in enumerate(rows):
+        padded[i, :r.shape[0]] = r
+    got, _ = prefill(params, jnp.asarray(padded),
+                     jnp.asarray(plens, jnp.int32))
+    for i, r in enumerate(rows):
+        ref, _ = prefill(params, jnp.asarray(r[None]))
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(ref[0]),
+                                      err_msg=f"row {i} (plen={plens[i]})")
+
+
+# ---------------------------------------------------------------------------
+# engine-level: bucketed == unbucketed serving, bounded executables
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_bucketed_serving_matches_unbucketed(arch):
+    """Acceptance: a mixed-length workload through the bucketed engine
+    reproduces per-length (unbucketed) serving bit-for-bit, on every
+    arch, while lowering at most len(ladder) prefill executables."""
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (3, 9, 5)]
+
+    bucketed = ServeEngine(model, params, max_len=16, max_batch=2,
+                           buckets=(4, 8, 16))
+    # an exact-length ladder degenerates to per-length (unbucketed)
+    # prefill: every prompt "bucket" is its own length
+    exact = ServeEngine(model, params, max_len=16, max_batch=2,
+                        buckets=range(1, 17))
+    out_b = bucketed.serve(prompts, 3)
+    out_e = exact.serve(prompts, 3)
+    for i, (a, b) in enumerate(zip(out_b, out_e)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{arch} request {i}")
+    assert bucketed.prefill_executables <= len(bucketed.buckets.ladder)
+    assert bucketed.buckets.real_tokens == sum(len(p) for p in prompts)
+
+
+def test_compile_count_bounded_by_buckets_hit():
+    """Regression: serving 15 distinct prompt lengths lowers exactly one
+    prefill executable per bucket HIT — not one per distinct length."""
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, max_len=32, max_batch=4,
+                         buckets=(4, 8, 16, 32))
+    rng = np.random.default_rng(2)
+    lens = list(range(3, 18))                  # 15 distinct lengths
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in lens]
+    engine.serve(prompts, 2)
+    buckets_hit = {engine.buckets.bucket_for(n) for n in lens}
+    assert buckets_hit == {4, 8, 16, 32}
+    assert engine.prefill_executables == len(buckets_hit)
+    assert engine.prefill_executables < len(set(lens))
+    assert engine.buckets.hits == {4: 2, 8: 4, 16: 8, 32: 1}
+
+
+# ---------------------------------------------------------------------------
+# PrefillBuckets policy
+# ---------------------------------------------------------------------------
+def test_bucket_ladder_policy():
+    b = PrefillBuckets.powers_of_two(100, min_bucket=8)
+    assert b.ladder == (8, 16, 32, 64, 100)
+    assert b.bucket_for(1) == 8
+    assert b.bucket_for(8) == 8
+    assert b.bucket_for(9) == 16
+    assert b.bucket_for(65) == 100
+    with pytest.raises(ValueError, match="exceeds top bucket"):
+        b.bucket_for(101)
+    # rungs above max_len are clipped; max_len is always the top rung
+    c = PrefillBuckets((4, 8, 64), max_len=20)
+    assert c.ladder == (4, 8, 20)
+    with pytest.raises(ValueError, match="positive"):
+        PrefillBuckets((0, 4))
+    with pytest.raises(ValueError, match="min_bucket"):
+        PrefillBuckets.powers_of_two(64, min_bucket=0)
+
+    b.record(5, 8)
+    b.record(20, 32)
+    assert b.real_tokens == 25 and b.padded_tokens == 40
+    assert b.pad_waste == pytest.approx(1 - 25 / 40)
+    assert b.stats()["hits"][8] == 1
+    assert "pad waste" in b.summary()
+
+
+def test_engine_rejects_mis_sized_ladder():
+    """A pre-built ladder must top out at exactly the engine max_len:
+    shorter strands admissible prompts mid-serve, taller lowers shapes
+    the cache can never use.  (Raw sequences are auto-clipped.)"""
+    model, params, _, _ = _arch("qwen1.5-0.5b")
+    for ladder in ((8,), (8, 64)):
+        with pytest.raises(ValueError, match="max_len"):
+            ServeEngine(model, params, max_len=32, max_batch=1,
+                        buckets=PrefillBuckets(ladder))
+    # scalar 0-d array params stay call-wide values (not sequences)
+    engine = ServeEngine(model, params, max_len=16, max_batch=1,
+                         buckets=(8, 16))
+    prompt = [np.arange(3, dtype=np.int32) % model.cfg.vocab_size]
+    a = engine.serve(prompt, 3, temperature=np.float32(50.0), seed=4)
+    b = engine.serve(prompt, 3, temperature=50.0, seed=4)
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_telemetry_accounts_true_lengths_not_padded():
+    """Prefill traffic in the RTC profile comes from TRUE prompt
+    lengths; bucket padding is visible only as pad-waste."""
+    from repro.serve import ServeTelemetry, TrafficModel
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, max_len=16, max_batch=2,
+                         buckets=(4, 8, 16))
+    tele = ServeTelemetry(TrafficModel.from_config(
+        get_config("qwen1.5-0.5b"), max_len=4096))
+    rng = np.random.default_rng(3)
+    plens = (3, 5, 9)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in plens]
+    engine.serve(prompts, 2, telemetry=tele)
+    assert tele.prefill_tokens == sum(plens)          # true lengths
+    assert tele.prefill_padded_tokens == 4 + 8 + 16   # bucketed lengths
+    assert tele.prefill_pad_waste == pytest.approx(1 - 17 / 28)
+    assert engine.buckets.stats()["pad_waste"] == tele.prefill_pad_waste

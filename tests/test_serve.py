@@ -155,6 +155,37 @@ def test_first_token_respects_temperature(engine, mixed_prompts):
     assert len(firsts) > 1
 
 
+def test_per_request_sampling_params(engine, solo_engine, mixed_prompts):
+    """temperature/top_k live on each request: a mixed greedy+temperature
+    batch reproduces each request's solo generation bit-for-bit."""
+    temps = [0.0, HOT, HOT, 0.0, HOT]
+    topks = [None, None, 5, 3, None]
+    mixed = engine.serve(mixed_prompts, 6, temperature=temps, top_k=topks,
+                         seed=11)
+    sequential = solo_engine.serve(mixed_prompts, 6, temperature=temps,
+                                   top_k=topks, seed=11)
+    for i, (a, b) in enumerate(zip(mixed, sequential)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    # greedy requests are key-independent -> comparable to a true solo
+    # serve (request ids restart at 0, but greedy never draws a key)
+    np.testing.assert_array_equal(
+        mixed[0], solo_engine.serve([mixed_prompts[0]], 6)[0])
+    # each request's params are isolated: request 1 matches the same
+    # request position under an all-HOT call, request 3 (temp 0) matches
+    # pure greedy serving regardless of its top_k
+    hot_all = engine.serve(mixed_prompts, 6, temperature=HOT, seed=11)
+    np.testing.assert_array_equal(mixed[1], hot_all[1])
+    greedy_all = engine.serve(mixed_prompts, 6)
+    np.testing.assert_array_equal(mixed[3], greedy_all[3])
+
+
+def test_per_request_param_validation(engine, mixed_prompts):
+    with pytest.raises(ValueError, match="temperature"):
+        engine.serve(mixed_prompts[:2], 2, temperature=[0.0])
+    with pytest.raises(ValueError, match="top_k"):
+        engine.serve(mixed_prompts[:2], 2, top_k=[2, 0])
+
+
 def test_top_k_one_is_greedy(engine, mixed_prompts):
     hot = engine.serve(mixed_prompts[:2], 6, temperature=HOT, top_k=1, seed=5)
     greedy = engine.serve(mixed_prompts[:2], 6)
