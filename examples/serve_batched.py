@@ -26,7 +26,8 @@ from repro.core.allocator import allocate_workload
 from repro.core.dram import GiB, smallest_fitting_module
 from repro.core.rtc import Variant, evaluate
 from repro.models.transformer import TransformerLM
-from repro.serve import ServeEngine, ServeTelemetry, TrafficModel
+from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
+                         TrafficModel)
 
 
 def main():
@@ -39,22 +40,34 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--serve-ctx", type=int, default=4096,
                     help="deployment context for the energy model")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the block-table paged cache")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--resident-pages", type=int, default=None,
+                    help="device page budget per KV stream; tight values "
+                         "force host offload (paged mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     model = TransformerLM(cfg)
     params = model.init(jax.random.key(0))
     max_len = args.max_prompt_len + args.new_tokens
+    paged = PagedCacheConfig(page_size=args.page_size,
+                             resident_pages=args.resident_pages) \
+        if args.paged else None
     engine = ServeEngine(model, params, max_len=max_len,
-                         max_batch=args.max_batch)
+                         max_batch=args.max_batch, paged=paged)
 
     # energy accounting uses the full-size config's byte constants, with
     # the smoke run's per-slot occupancies extrapolated to the
     # deployment context (ctx_scale) so KV traffic and cache footprint
     # describe the same serve_ctx-sized deployment.
     full = get_config(args.arch)
-    tele = ServeTelemetry(TrafficModel.from_config(full, args.serve_ctx),
-                          ctx_scale=args.serve_ctx / max_len)
+    tele = ServeTelemetry(
+        TrafficModel.from_config(full, args.serve_ctx,
+                                 page_size=args.page_size if args.paged else 0),
+        ctx_scale=args.serve_ctx / max_len)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(1, args.max_prompt_len + 1, args.requests)
@@ -72,6 +85,12 @@ def main():
     print(f"prefill {engine.buckets.summary()}; "
           f"{engine.prefill_executables} lowered prefill executables "
           f"for {len(set(int(n) for n in lens))} distinct prompt lengths")
+    if args.paged:
+        print(f"paged cache: page={args.page_size} tokens, "
+              f"budget={engine.page_table.resident_pages} pages/stream; "
+              f"{tele.page_outs} offloads / {tele.page_ins} restores "
+              f"({tele.page_out_bytes_total + tele.page_in_bytes_total:,} "
+              f"deployment-scale bytes of page traffic)")
     print(f"sample continuation: {outs[0][:10].tolist()}")
 
     # RTC on THIS loop (weights in LPDDR-class memory, edge serving):

@@ -96,6 +96,8 @@ def from_decode(
     kv_write_bytes: float,
     footprint_bytes: int,
     step_period_s: float,
+    page_out_bytes: float = 0.0,
+    page_in_bytes: float = 0.0,
     regular: bool = True,
     row_utilization: float = 1.0,
 ) -> WorkloadProfile:
@@ -109,6 +111,14 @@ def from_decode(
     streaming keeps full row utilization.  Built for engine telemetry
     (:mod:`repro.serve.telemetry`), which measures these quantities
     from a real serving loop instead of hand-deriving them.
+
+    ``page_out_bytes`` / ``page_in_bytes``: per-step host-offload
+    traffic of a paged cache (pages leaving device DRAM are reads,
+    pages coming back are writes).  Page moves are whole-page streams
+    through the same AGU-expressible block tables as the KV sweep, so
+    they stay inside the ``regular`` access contract; they add to the
+    traffic RTC's implicit-refresh window sees, which is why ignoring
+    them would overstate refresh savings for an offloading engine.
     """
     if step_period_s <= 0:
         raise ValueError("step_period_s must be positive")
@@ -116,8 +126,9 @@ def from_decode(
         name=name,
         footprint_bytes=int(footprint_bytes),
         iter_period_s=float(step_period_s),
-        read_bytes_per_iter=float(param_read_bytes) + float(kv_read_bytes),
-        write_bytes_per_iter=float(kv_write_bytes),
+        read_bytes_per_iter=(float(param_read_bytes) + float(kv_read_bytes)
+                             + float(page_out_bytes)),
+        write_bytes_per_iter=float(kv_write_bytes) + float(page_in_bytes),
         regular=regular,
         row_utilization=row_utilization,
     )

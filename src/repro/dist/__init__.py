@@ -65,6 +65,18 @@ additionally shard one free, data-divisible dimension over the data
 axes (never the stacked scan dim); small tensors stay replicated.
 ZeRO-1 reuses the same helper (``_add_fsdp``) to scatter replicated
 optimizer moments.
+
+Paged-cache placement (``ShardingPolicy.page_spec``)
+====================================================
+
+Paged decode-cache pools (``[n_pages, page_size, ...]`` — see
+:mod:`repro.serve.paging`) have no batch dimension; the *page* dim is
+the capacity dim, so it takes the data axes the contiguous cache put on
+batch — but only when the pool page count is provably divisible
+(pjit argument shardings do not pad).  KV heads / state channels keep
+the model axis per the serving rules in ``repro.serve.engine
+.cache_specs``; block tables replicate (tiny int32 indirection state
+every device needs to resolve its page gathers).
 """
 from repro.dist.axisenv import AxisEnv, axis_env, constrain, current_env
 from repro.dist.sharding import ShardingPolicy, batch_specs, param_specs

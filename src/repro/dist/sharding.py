@@ -79,6 +79,24 @@ class ShardingPolicy:
             n *= s
         return n
 
+    # ---- paged-cache placement --------------------------------------------
+    def page_spec(self, n_pages: int) -> Axes:
+        """PartitionSpec entry for the page dimension of a paged-cache
+        pool (``[n_pages, page_size, ...]``).
+
+        A page pool has no batch dimension — the page dim *is* the
+        capacity dim, so it takes the data axes the contiguous cache put
+        on batch.  pjit argument shardings do not pad, so the dim is
+        only sharded when provably divisible (mirrors the FSDP rule);
+        GSPMD then turns the block-table gather into the cross-device
+        page fetch.  Unknown mesh sizes or indivisible pools replicate,
+        which always lowers.
+        """
+        dsize = self.data_size
+        if dsize and dsize > 1 and n_pages % dsize == 0:
+            return self.batch_spec
+        return None
+
 
 def _key(entry) -> str:
     """Stringify one pytree path entry (DictKey/SequenceKey/GetAttrKey)."""

@@ -8,6 +8,7 @@ both are validated against each other in the kernel test sweep).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
@@ -18,7 +19,9 @@ from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, rope, softcap
 
 __all__ = ["attn_init", "attn_apply", "attn_prefill", "attn_decode",
-           "KVCache", "init_kv_cache"]
+           "KVCache", "init_kv_cache",
+           "PagedKVCache", "init_paged_kv_cache",
+           "ZERO_PAGE", "DUMP_PAGE", "RESERVED_PAGES"]
 
 
 def attn_init(key, cfg: ModelConfig, dtype) -> dict:
@@ -207,12 +210,89 @@ def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCach
                    jnp.zeros((), jnp.int32))
 
 
-def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
+# Reserved pool pages of every paged cache (KV and recurrent-state):
+#   page 0 — ZERO: never written; block entries of a live slot's not-yet-
+#            allocated logical pages point here, so gathers read exact
+#            zeros (bit-identical to a fresh contiguous cache row).
+#   page 1 — DUMP: write sink; block entries of *dead* (unoccupied) batch
+#            slots point here so their decode writes land harmlessly
+#            outside every live slot's pages.  Its content is garbage and
+#            is only ever read by dead rows, whose outputs are ignored.
+ZERO_PAGE = 0
+DUMP_PAGE = 1
+RESERVED_PAGES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVCache:
+    """Block-table paged decode cache of one attention layer.
+
+    The logical cache a slot sees is identical to :class:`KVCache`'s
+    ``[cache_len]`` ring/append buffer; physically the rows live in
+    fixed-size pages of a shared pool, indirected per batch slot through
+    ``block``.  Pages are allocated on first write and freed on retire
+    by the serving-side :class:`repro.serve.paging.PageTable`; the model
+    layer only reads/writes through the indirection.  ``page_size`` and
+    ``cache_len`` are static (pytree aux data), so one lowered decode
+    step serves any block-table state.
+    """
+
+    kp: jnp.ndarray       # [n_pages, page_size, kv_heads, head_dim] pool
+    vp: jnp.ndarray
+    block: jnp.ndarray    # [b, n_logical_pages] int32 pool page ids
+    length: jnp.ndarray   # [] int32 — high-water mark (as KVCache)
+    page_size: int = dataclasses.field(metadata=dict(static=True))
+    cache_len: int = dataclasses.field(metadata=dict(static=True))
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache, data_fields=("kp", "vp", "block", "length"),
+    meta_fields=("page_size", "cache_len"))
+
+
+def n_logical_pages(cache_len: int, page_size: int) -> int:
+    """Pages covering a ``cache_len``-slot logical cache (last may be
+    partial: the gathered view is sliced back to ``cache_len``)."""
+    return -(-cache_len // page_size)
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                        page_size: int, n_pages: int, dtype) -> PagedKVCache:
+    """Fresh pool of ``n_pages`` (incl. the 2 reserved) + all-DUMP block
+    tables: every slot is dead until the page table assigns pages."""
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    n_lp = n_logical_pages(cache_len, page_size)
+    shape = (n_pages, page_size, kvh, hd)
+    return PagedKVCache(
+        kp=jnp.zeros(shape, dtype), vp=jnp.zeros(shape, dtype),
+        block=jnp.full((batch, n_lp), DUMP_PAGE, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+        page_size=page_size, cache_len=cache_len)
+
+
+def paged_kv_view(cache: PagedKVCache):
+    """Gather the block-table indirection into the contiguous
+    ``[b, cache_len, kv_heads, head_dim]`` layout :class:`KVCache`
+    stores directly.  Values land in the exact same slot order, which is
+    what makes paged attention bit-identical to contiguous attention."""
+    b, n_lp = cache.block.shape
+    k = cache.kp[cache.block].reshape(
+        (b, n_lp * cache.page_size) + cache.kp.shape[2:])
+    v = cache.vp[cache.block].reshape(
+        (b, n_lp * cache.page_size) + cache.vp.shape[2:])
+    return k[:, :cache.cache_len], v[:, :cache.cache_len]
+
+
+def attn_decode(params, cfg: ModelConfig, x, cache, pos, kind: str):
     """One-token decode. x: [b, 1, d]; pos: [] or [b] int32 absolute
     position (vector = per-slot positions for continuous batching).
 
     ``local`` layers use the cache as a ring buffer of ``window_size``
-    slots; ``global`` layers append at ``pos``.
+    slots; ``global`` layers append at ``pos``.  ``cache`` is either a
+    contiguous :class:`KVCache` or a block-table :class:`PagedKVCache`;
+    the attention math runs on the same ``[b, cache_len]`` slot layout
+    either way (paged caches gather their pages into it), so the two
+    forms decode bit-identically.
     """
     q, k_new, v_new = _project_qkv(params, cfg, x)
     b = x.shape[0]
@@ -222,11 +302,25 @@ def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
     q = rope(q, posv, cfg.rope_theta)
     k_new = rope(k_new, posv, cfg.rope_theta)
 
-    cache_len = cache.k.shape[1]
+    paged = isinstance(cache, PagedKVCache)
+    cache_len = cache.cache_len if paged else cache.k.shape[1]
     # cache_len == window_size for local layers (ring buffer), == max_len
     # for global layers (plain append, since pos < max_len).
     slot = pos % cache_len
-    if per_slot:
+    if paged:
+        # write the new row through the block table, then gather the
+        # logical view.  The page holding ``slot`` must be assigned
+        # (PageTable.prepare_step) — dead slots' tables point at DUMP.
+        jdx, off = slot // cache.page_size, slot % cache.page_size
+        if per_slot:
+            pid = cache.block[jnp.arange(b), jdx]
+        else:
+            pid = cache.block[:, jdx]
+        kp = cache.kp.at[pid, off].set(k_new[:, 0])
+        vp = cache.vp.at[pid, off].set(v_new[:, 0])
+        new_cache = dataclasses.replace(cache, kp=kp, vp=vp)
+        k, v = paged_kv_view(new_cache)
+    elif per_slot:
         rows = jnp.arange(b)
         k = cache.k.at[rows, slot].set(k_new[:, 0])
         v = cache.v.at[rows, slot].set(v_new[:, 0])
@@ -268,7 +362,10 @@ def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, pos, kind: str):
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v).reshape(b, 1, -1)
     new_len = jnp.minimum(jnp.max(pos) + 1, cache_len).astype(jnp.int32)
-    new_cache = KVCache(k, v, new_len)
+    if paged:
+        new_cache = dataclasses.replace(new_cache, length=new_len)
+    else:
+        new_cache = KVCache(k, v, new_len)
     return out @ params["wo"], new_cache
 
 

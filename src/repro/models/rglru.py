@@ -15,6 +15,7 @@ O(1) update.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Tuple
 
 import jax
@@ -25,7 +26,8 @@ from repro.models.config import ModelConfig
 from repro.models.layers import causal_conv1d, dense_init
 
 __all__ = ["rglru_init", "rglru_apply", "rglru_prefill", "rglru_decode",
-           "RGLRUCache", "init_rglru_cache"]
+           "RGLRUCache", "init_rglru_cache",
+           "PagedRGLRUCache", "init_paged_rglru_cache"]
 
 _C = 8.0  # Griffin's fixed temperature on the recurrence gate
 
@@ -116,13 +118,49 @@ def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
     )
 
 
-def rglru_decode(params, cfg: ModelConfig, x, cache: RGLRUCache
-                 ) -> Tuple[jnp.ndarray, RGLRUCache]:
-    """One-token decode. x: [b, 1, d]."""
+@dataclasses.dataclass(frozen=True)
+class PagedRGLRUCache:
+    """Page-pool mirror of :class:`RGLRUCache` — see
+    :class:`repro.models.ssm.PagedSSMCache` for the state-page model."""
+
+    conv_p: jnp.ndarray   # [n_state_pages, k-1, dl]
+    h_p: jnp.ndarray      # [n_state_pages, dl] f32
+    block: jnp.ndarray    # [b] int32 state-page ids
+
+
+jax.tree_util.register_dataclass(
+    PagedRGLRUCache, data_fields=("conv_p", "h_p", "block"), meta_fields=())
+
+
+def init_paged_rglru_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                           dtype) -> PagedRGLRUCache:
+    from repro.models.attention import DUMP_PAGE
+    dl = cfg.resolved_lru_width
+    return PagedRGLRUCache(
+        conv_p=jnp.zeros((n_pages, cfg.conv1d_width - 1, dl), dtype),
+        h_p=jnp.zeros((n_pages, dl), jnp.float32),
+        block=jnp.full((batch,), DUMP_PAGE, jnp.int32),
+    )
+
+
+def rglru_decode(params, cfg: ModelConfig, x, cache):
+    """One-token decode. x: [b, 1, d].  ``cache`` is a contiguous
+    :class:`RGLRUCache` or a :class:`PagedRGLRUCache` (gather →
+    identical update → scatter back)."""
+    paged = isinstance(cache, PagedRGLRUCache)
+    conv = cache.conv_p[cache.block] if paged else cache.conv
+    h0 = cache.h_p[cache.block] if paged else cache.h
     y = x @ params["wx"]
     gate = x @ params["wgate"]
-    y, conv_state = causal_conv1d(params, y, cache.conv)
+    y, conv_state = causal_conv1d(params, y, conv)
     a, x_in = _gates(params, y)
-    h = a[:, 0] * cache.h + x_in[:, 0]
+    h = a[:, 0] * h0 + x_in[:, 0]
     out = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)
-    return out @ params["out_proj"], RGLRUCache(conv=conv_state, h=h)
+    if paged:
+        new_cache = dataclasses.replace(
+            cache,
+            conv_p=cache.conv_p.at[cache.block].set(conv_state),
+            h_p=cache.h_p.at[cache.block].set(h))
+    else:
+        new_cache = RGLRUCache(conv=conv_state, h=h)
+    return out @ params["out_proj"], new_cache

@@ -15,6 +15,7 @@ Scan strategy (TPU-adapted, see DESIGN.md):
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Tuple
 
 import jax
@@ -25,7 +26,7 @@ from repro.models.config import ModelConfig
 from repro.models.layers import causal_conv1d, dense_init
 
 __all__ = ["ssm_init", "ssm_apply", "ssm_prefill", "ssm_decode", "SSMCache",
-           "init_ssm_cache"]
+           "init_ssm_cache", "PagedSSMCache", "init_paged_ssm_cache"]
 
 CHUNK = 128  # sequence chunk for the hybrid scan
 
@@ -192,14 +193,59 @@ def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
     )
 
 
-def ssm_decode(params, cfg: ModelConfig, x, cache: SSMCache
-               ) -> Tuple[jnp.ndarray, SSMCache]:
-    """One-token decode. x: [b, 1, d]."""
+@dataclasses.dataclass(frozen=True)
+class PagedSSMCache:
+    """Page-pool mirror of :class:`SSMCache` for the serving page table.
+
+    Each batch slot's O(1) recurrent state (conv tail + hidden state) is
+    one *state page* in a shared pool, indirected through ``block`` —
+    the same allocate-on-admit / free-on-retire / offload-on-preempt
+    lifecycle as KV pages (:class:`repro.models.attention.PagedKVCache`),
+    so every architecture family serves through one
+    :class:`repro.serve.paging.PageTable`.  Decode gathers the state,
+    runs the exact contiguous update, and scatters it back, so paged and
+    contiguous decode are bit-identical.
+    """
+
+    conv_p: jnp.ndarray   # [n_state_pages, k-1, di]
+    h_p: jnp.ndarray      # [n_state_pages, di, n] f32
+    block: jnp.ndarray    # [b] int32 state-page ids
+
+
+jax.tree_util.register_dataclass(
+    PagedSSMCache, data_fields=("conv_p", "h_p", "block"), meta_fields=())
+
+
+def init_paged_ssm_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                         dtype) -> PagedSSMCache:
+    from repro.models.attention import DUMP_PAGE
+    di = cfg.d_inner
+    return PagedSSMCache(
+        conv_p=jnp.zeros((n_pages, cfg.ssm_conv - 1, di), dtype),
+        h_p=jnp.zeros((n_pages, di, cfg.ssm_state), jnp.float32),
+        block=jnp.full((batch,), DUMP_PAGE, jnp.int32),
+    )
+
+
+def ssm_decode(params, cfg: ModelConfig, x, cache):
+    """One-token decode. x: [b, 1, d].  ``cache`` is a contiguous
+    :class:`SSMCache` or a :class:`PagedSSMCache` (gather → identical
+    update → scatter back)."""
+    paged = isinstance(cache, PagedSSMCache)
+    conv = cache.conv_p[cache.block] if paged else cache.conv
+    h0 = cache.h_p[cache.block] if paged else cache.h
     di = cfg.d_inner
     xz = x @ params["in_proj"]
     xin, z = xz[..., :di], xz[..., di:]
-    xc, conv_state = causal_conv1d(params, xin, cache.conv)
+    xc, conv_state = causal_conv1d(params, xin, conv)
     xc = jax.nn.silu(xc)
-    y, h = _ssm_inner(params, cfg, xc, cache.h)
+    y, h = _ssm_inner(params, cfg, xc, h0)
     y = y * jax.nn.silu(z)
-    return y @ params["out_proj"], SSMCache(conv=conv_state, h=h)
+    if paged:
+        new_cache = dataclasses.replace(
+            cache,
+            conv_p=cache.conv_p.at[cache.block].set(conv_state),
+            h_p=cache.h_p.at[cache.block].set(h))
+    else:
+        new_cache = SSMCache(conv=conv_state, h=h)
+    return y @ params["out_proj"], new_cache

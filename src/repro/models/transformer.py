@@ -245,6 +245,47 @@ class TransformerLM:
                      for kind in cfg.pattern_tail)
         return {"groups": tuple(groups), "tail": tail}
 
+    def _one_paged_cache(self, kind, batch, max_ctx, page_size, kv_pages, dt):
+        cfg = self.cfg
+        if kind in ("global", "local"):
+            return attn.init_paged_kv_cache(
+                cfg, batch, cfg.decode_cache_len(kind, max_ctx),
+                page_size, kv_pages, dt)
+        n_state = batch + attn.RESERVED_PAGES
+        if kind == "ssm":
+            return ssm_mod.init_paged_ssm_cache(cfg, batch, n_state, dt)
+        if kind == "rglru":
+            return rglru_mod.init_paged_rglru_cache(cfg, batch, n_state, dt)
+        raise ValueError(kind)  # pragma: no cover
+
+    def init_paged_cache(self, batch: int, max_ctx: int, page_size: int,
+                         kv_pages: int) -> dict:
+        """Paged twin of :meth:`init_cache`: the same {'groups', 'tail'}
+        structure, but each attention layer holds a ``kv_pages``-page
+        pool (incl. the 2 reserved pages) behind a per-slot block table
+        sized for ``max_ctx`` logical positions, and each recurrent
+        layer a ``batch``-deep state-page pool.  ``decode_step`` accepts
+        either form unchanged; a fresh paged cache decodes bit-identically
+        to a fresh ``init_cache(batch, max_ctx)`` once pages are assigned
+        (see :class:`repro.serve.paging.PageTable`)."""
+        cfg, dt = self.cfg, _dtype(self.cfg)
+        groups = []
+        for kind in cfg.attn_pattern:
+            c = self._one_paged_cache(kind, batch, max_ctx, page_size,
+                                      kv_pages, dt)
+            groups.append(
+                jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.n_groups,) + x.shape
+                    ),
+                    c,
+                )
+            )
+        tail = tuple(self._one_paged_cache(kind, batch, max_ctx, page_size,
+                                           kv_pages, dt)
+                     for kind in cfg.pattern_tail)
+        return {"groups": tuple(groups), "tail": tail}
+
     def _block_prefill(self, kind, p, x, positions, max_len, lengths=None):
         """Full-sequence block forward that also emits the decode cache.
 

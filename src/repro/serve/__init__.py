@@ -1,17 +1,59 @@
 """Serving stack: sharded step builders, the continuous-batching engine,
-and RTC traffic telemetry.
+paged cache management, and RTC traffic telemetry.
 
 ``engine`` owns the compute (length-bucketed masked prefill, per-slot-
-position decode, unified per-request sampling); ``telemetry`` owns the
-accounting (engine events -> DRAM bytes ->
+position decode, unified per-request sampling); ``paging`` owns the
+cache residency (block tables, page pools, host offload); ``telemetry``
+owns the accounting (engine events -> DRAM bytes ->
 :class:`repro.core.workload.WorkloadProfile`), which is how serving
 traffic reaches the paper's RTC policy engine.
+
+Paged-cache design note (PR 4)
+------------------------------
+The contiguous engine gave every batch slot a ``max_len``-row cache
+allocation for its whole lifetime — long contexts were rejected at
+admission and cold KV occupied hot accelerator memory.  The paged mode
+(``ServeEngine(..., paged=PagedCacheConfig(...))``) replaces that with
+block-table paging, chosen as follows:
+
+* **Page size** — ``page_size`` tokens of K+V per attention layer (one
+  pool per attention pattern position; recurrent ssm/rglru state and
+  conv tails are one *state page* per slot in mirror pools, so all 10
+  architectures go through one :class:`~repro.serve.paging.PageTable`).
+  A page is simultaneously the allocation quantum, the offload-transfer
+  quantum, and — for ``rtc.evaluate`` — the DRAM-row mapping quantum
+  (PENDRAM's point: how logical rows land on physical rows is a policy
+  axis; the page table is that policy made explicit).  Logical layouts
+  equal the contiguous cache's ring/append order, so paged decode is
+  *bit-identical* to contiguous decode (pinned across all 10 archs in
+  ``tests/test_paged_cache.py``).
+* **Capacity vs. residency** — a slot's logical capacity is ``max_ctx``
+  (may exceed ``max_len``: decode grows the slot's page list
+  allocate-on-write, so prompt+generation can outlive the old
+  contiguous cap), while device residency is bounded by
+  ``resident_pages`` per KV stream.
+* **Eviction policy** — when a pool runs dry the engine preempts the
+  *newest* live request (highest request id; the oldest admitted slot
+  is only victimized by its own elders, which preserves FCFS progress),
+  offloads its pages to host memory via ``jax.device_put``, and resumes
+  it FIFO — before any new admission — once a slot and pages free up.
+  Restores are bit-exact: pages re-enter different physical pool pages,
+  the block table re-targets, content and the continued generation are
+  unchanged.
+* **Offload traffic accounting** — every offload/restore is a telemetry
+  event (``record_page_out`` / ``record_page_in``); whole-page bytes
+  (context rounded up per layer, plus state pages) join weight/KV/state
+  traffic in ``workload.from_decode`` as extra DRAM reads/writes, so
+  the RTC savings number sees exactly the traffic the refresh model
+  cares about.  The invariant "summed per-event bytes == profile x
+  steps" is pinned in ``tests/test_paged_cache.py``.
 """
 from repro.serve.engine import (PrefillBuckets, Request, ServeEngine,
                                 build_decode_step, build_prefill_step,
                                 cache_specs)
+from repro.serve.paging import PagedCacheConfig, PageTable, logical_view
 from repro.serve.telemetry import ServeTelemetry, TrafficModel
 
 __all__ = ["PrefillBuckets", "Request", "ServeEngine", "build_decode_step",
-           "build_prefill_step", "cache_specs", "ServeTelemetry",
-           "TrafficModel"]
+           "build_prefill_step", "cache_specs", "PagedCacheConfig",
+           "PageTable", "logical_view", "ServeTelemetry", "TrafficModel"]

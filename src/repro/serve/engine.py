@@ -40,6 +40,7 @@ from repro.dist.axisenv import axis_env
 from repro.dist.sharding import ShardingPolicy, param_specs
 from repro.models.config import ModelConfig
 from repro.models.transformer import TransformerLM
+from repro.serve.paging import PagedCacheConfig, PageTable
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
            "PrefillBuckets", "Request", "ServeEngine"]
@@ -47,18 +48,28 @@ __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
 
 def cache_specs(model: TransformerLM, batch: int, cache_len: int,
                 policy: ShardingPolicy, kv_seq_axis=None,
-                model_axis_size: Optional[int] = None):
-    """PartitionSpec tree matching ``model.init_cache(batch, cache_len)``.
+                model_axis_size: Optional[int] = None,
+                cache_factory=None):
+    """PartitionSpec tree matching ``model.init_cache(batch, cache_len)``
+    (or ``cache_factory()`` — e.g. a paged cache structure).
 
     KV placement mirrors ``attention.attn_decode``: shard heads on the
     model axis when there are enough KV heads to fill it, otherwise
     shard the cache length (flash-decode).  ``kv_seq_axis`` overrides
     (long_500k shards the length over the whole mesh).
+
+    Paged-cache leaves (``kp``/``vp`` pools, ``conv_p``/``h_p`` state
+    pools, ``block`` tables): pools have no batch dim, so the *page*
+    dim takes the data axes instead (``ShardingPolicy.page_spec`` —
+    only when provably divisible), heads/state channels keep the model
+    axis, and block tables replicate (they are tiny int32 indirection
+    state every device needs to resolve its gathers).
     """
     cfg = model.cfg
     b = policy.batch_spec if batch > 1 else None
     m = policy.model_axis
-    shapes = jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+    shapes = jax.eval_shape(cache_factory if cache_factory is not None
+                            else lambda: model.init_cache(batch, cache_len))
     heads_fit = (model_axis_size is not None and cfg.n_kv_heads > 0
                  and cfg.n_kv_heads % model_axis_size == 0)
 
@@ -75,14 +86,34 @@ def cache_specs(model: TransformerLM, batch: int, cache_len: int,
             if heads_fit:
                 return P(*lead, b, None, m, None)
             return P(*lead, b, m, None, None)
+        if name in ("kp", "vp"):          # [(G,) n_pages, P, KV, hd]
+            n_pages = leaf.shape[len(lead)]
+            if kv_seq_axis is not None:
+                # same no-padding rule as page_spec: pjit argument
+                # shardings reject indivisible dims, so only shard the
+                # page dim when the seq-axis extent provably divides it
+                axes = kv_seq_axis if isinstance(kv_seq_axis, tuple) \
+                    else (kv_seq_axis,)
+                size = 1
+                for a in axes:
+                    size *= policy.axis_size(a) or 0
+                sd = kv_seq_axis if size and n_pages % size == 0 else None
+                return P(*lead, sd, None, None, None)
+            pd = policy.page_spec(n_pages)
+            if heads_fit:
+                return P(*lead, pd, None, m, None)
+            return P(*lead, pd, None, None, None)
+        if name == "block":
+            return P(*([None] * nd))
         if name == "length":
             return P(*([None] * nd))
-        if name == "conv":                 # [(G,) B, k-1, width]
-            return P(*lead, b, None, m)
-        if name == "h":
-            if nd == len(lead) + 3:        # ssm: [(G,) B, di, n]
-                return P(*lead, b, m, None)
-            return P(*lead, b, m)          # rglru: [(G,) B, dl]
+        if name in ("conv", "conv_p"):     # [(G,) B|n_sp, k-1, width]
+            return P(*lead, b if name == "conv" else None, None, m)
+        if name in ("h", "h_p"):
+            hb = b if name == "h" else None
+            if nd == len(lead) + 3:        # ssm: [(G,) B|n_sp, di, n]
+                return P(*lead, hb, m, None)
+            return P(*lead, hb, m)         # rglru: [(G,) B|n_sp, dl]
         return P(*([None] * nd))
 
     return jax.tree_util.tree_map_with_path(one, shapes)
@@ -142,13 +173,18 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
 
 def build_decode_step(model: TransformerLM, mesh: Mesh,
                       policy: ShardingPolicy, batch: int, cache_len: int,
-                      kv_seq_axis=None, per_slot_pos: bool = False):
+                      kv_seq_axis=None, per_slot_pos: bool = False,
+                      cache_factory=None):
     """One-token decode with sharded KV cache. Returns
     (step_fn, param_shardings, cache_shardings).
 
     ``per_slot_pos``: the position argument is a [batch] vector (each
     slot decodes its own sequence offset — continuous batching) instead
     of one scalar shared by the whole batch.
+
+    ``cache_factory``: overrides the cache structure the step is lowered
+    for (the paged engine passes ``PageTable.init_cache`` so the step
+    consumes pool + block-table leaves instead of contiguous buffers).
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     pspecs = param_specs(jax.eval_shape(
@@ -156,7 +192,8 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                        is_leaf=lambda x: isinstance(x, P))
     cspecs = cache_specs(model, batch, cache_len, policy, kv_seq_axis,
-                         model_axis_size=sizes.get(policy.model_axis))
+                         model_axis_size=sizes.get(policy.model_axis),
+                         cache_factory=cache_factory)
     csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
                        is_leaf=lambda x: isinstance(x, P))
     tok_sh = NamedSharding(
@@ -292,6 +329,25 @@ class _Slot:
         self.out = [first_token]
 
 
+class _Suspended:
+    """A preempted request: host-offloaded pages + scheduler state.
+
+    Created when the paged engine must reclaim a victim's device pages
+    mid-generation; resumed (bit-identically — sampling keys are
+    (request, token-index)-addressed) once a batch slot and enough free
+    pages exist.
+    """
+    __slots__ = ("req", "pos", "emitted", "out", "next_tok", "payload")
+
+    def __init__(self, req, pos, emitted, out, next_tok, payload):
+        self.req = req
+        self.pos = pos
+        self.emitted = emitted
+        self.out = out
+        self.next_tok = next_tok
+        self.payload = payload
+
+
 class ServeEngine:
     """Continuous-batching serving loop over ``max_batch`` cache slots.
 
@@ -317,6 +373,15 @@ class ServeEngine:
     ``serve`` accepts either one value for the whole call or a
     per-prompt sequence, and a mixed greedy+stochastic batch reproduces
     each request's solo generation bit-for-bit.
+
+    ``paged=PagedCacheConfig(...)`` switches the decode cache to
+    block-table paging (:mod:`repro.serve.paging` — design note in the
+    package docstring): slots grow page lists allocate-on-write up to
+    ``max_ctx`` (which may exceed ``max_len``, the prefill cap), and
+    when the resident-page budget runs dry the newest live request is
+    preempted, its pages offloaded to host, and resumed — bit-
+    identically — once pages free up.  Paged and contiguous serving
+    produce identical tokens for any in-budget workload.
     """
 
     def __init__(self, model: TransformerLM, params: dict,
@@ -324,13 +389,25 @@ class ServeEngine:
                  eos_id: Optional[int] = None, bos_id: Optional[int] = None,
                  mesh: Optional[Mesh] = None,
                  policy: Optional[ShardingPolicy] = None,
-                 buckets=None):
+                 buckets=None, paged=None):
         self.model = model
         self.params = params
         self.max_len = int(max_len)
         self.max_batch = int(max_batch)
         self.eos_id = eos_id
         self.bos_id = bos_id
+        if paged is True:
+            paged = PagedCacheConfig()
+        self.paged: Optional[PagedCacheConfig] = paged or None
+        if self.paged is not None:
+            self.max_ctx = int(self.paged.max_ctx or self.max_len)
+            if self.max_ctx < self.max_len:
+                raise ValueError(
+                    f"paged max_ctx {self.max_ctx} < max_len "
+                    f"{self.max_len}: the prefill cap cannot exceed the "
+                    f"logical context capacity")
+        else:
+            self.max_ctx = self.max_len
         if buckets is None:
             buckets = PrefillBuckets.powers_of_two(self.max_len)
         elif not isinstance(buckets, PrefillBuckets):
@@ -353,20 +430,43 @@ class ServeEngine:
         if policy is None:
             policy = ShardingPolicy.for_mesh(mesh)
         self.mesh, self.policy = mesh, policy
+        # prefill materializes a max_ctx-long contiguous cache (== max_len
+        # unless paged): positions are then identical between the
+        # prefilled cache and the (possibly longer) decode layout, so
+        # slot insertion is a pure copy/scatter for every layer kind.
         self._prefill = build_prefill_step(
-            model, mesh, policy, cache_len=self.max_len, batch=1)[0]
-        self._decode, _, self._cache_sh = build_decode_step(
-            model, mesh, policy, batch=self.max_batch,
-            cache_len=self.max_len, per_slot_pos=True)
-        # pin the insert output to the decode step's cache shardings, so
-        # the slot-update round trip stays layout-stable on real meshes
-        # (decode donates and re-emits the same placement).
-        self._insert = jax.jit(self._insert_cache,
-                               out_shardings=self._cache_sh)
+            model, mesh, policy, cache_len=self.max_ctx, batch=1)[0]
+        if self.paged is not None:
+            self._table = PageTable(
+                model, self.max_batch, self.max_ctx, self.paged.page_size,
+                self.paged.resident_pages)
+            self._decode, _, self._cache_sh = build_decode_step(
+                model, mesh, policy, batch=self.max_batch,
+                cache_len=self.max_ctx, per_slot_pos=True,
+                cache_factory=self._table.init_cache)
+            self._table.bind_shardings(self._cache_sh)
+            self._insert = None
+        else:
+            self._table = None
+            self._decode, _, self._cache_sh = build_decode_step(
+                model, mesh, policy, batch=self.max_batch,
+                cache_len=self.max_len, per_slot_pos=True)
+            # pin the insert output to the decode step's cache shardings,
+            # so the slot-update round trip stays layout-stable on real
+            # meshes (decode donates and re-emits the same placement).
+            self._insert = jax.jit(self._insert_cache,
+                                   out_shardings=self._cache_sh)
         self._keys = jax.jit(jax.vmap(
             lambda base, r, i: jax.random.fold_in(jax.random.fold_in(base, r), i),
             in_axes=(None, 0, 0)))
         self._sample = jax.jit(self._sample_fn, static_argnums=(4,))
+
+    @property
+    def page_table(self) -> Optional[PageTable]:
+        """The engine's :class:`~repro.serve.paging.PageTable` in paged
+        mode (``None`` for the contiguous cache) — the public handle to
+        the resolved page budget and per-stream allocator state."""
+        return self._table
 
     @property
     def prefill_executables(self) -> int:
@@ -445,18 +545,24 @@ class ServeEngine:
         return jax.tree_util.tree_map_with_path(ins, cache, one)
 
     # -------------------------------------------------------------- requests
-    def _admit_prompt(self, prompt) -> np.ndarray:
+    def _admit_prompt(self, prompt, idx: int) -> np.ndarray:
         p = np.asarray(prompt, np.int32).reshape(-1)
         if p.size == 0:
             if self.bos_id is None:
                 raise ValueError(
-                    "empty prompt: generation must start from at least one "
-                    "token; construct the engine with bos_id= to serve "
-                    "BOS-only requests")
+                    f"empty prompt at index {idx}: generation must start "
+                    "from at least one token; construct the engine with "
+                    "bos_id= to serve BOS-only requests")
             p = np.asarray([self.bos_id], np.int32)
-        if p.size > self.max_len:
+        top = self.buckets.ladder[-1]
+        if p.size > top:
+            # validate here, with the request named, instead of failing
+            # opaquely inside PrefillBuckets.bucket_for mid-serve (after
+            # other requests already ran).
             raise ValueError(
-                f"prompt length {p.size} exceeds engine max_len {self.max_len}")
+                f"prompt {idx} has length {p.size}, which exceeds the "
+                f"largest prefill bucket {top} (engine max_len "
+                f"{self.max_len}); split the prompt or raise max_len")
         return p
 
     # ----------------------------------------------------------------- serve
@@ -491,7 +597,7 @@ class ServeEngine:
         for tk in top_ks:
             if tk is not None and tk < 1:
                 raise ValueError(f"top_k must be >= 1, got {tk}")
-        requests = [Request(i, self._admit_prompt(p), max_new_tokens,
+        requests = [Request(i, self._admit_prompt(p, i), max_new_tokens,
                             temperature=float(t),
                             top_k=vocab if tk is None else int(tk))
                     for i, (p, t, tk) in enumerate(zip(prompts, temps, top_ks))]
@@ -500,13 +606,18 @@ class ServeEngine:
             return [np.zeros((0,), np.int32) for _ in requests]
 
         B = self.max_batch
+        paged = self._table is not None
         use_top_k = any(r.top_k != vocab for r in requests)
 
         def sample(logits, keys, temps_, topks_):
             return self._sample(logits, keys, temps_, topks_, use_top_k)
 
         base = jax.random.key(seed)
-        cache = self.model.init_cache(B, self.max_len)
+        if paged:
+            self._table.reset()
+            cache = self._table.init_cache()
+        else:
+            cache = self.model.init_cache(B, self.max_len)
         slots: List[Optional[_Slot]] = [None] * B
         tok_vec = np.zeros((B,), np.int32)
         pos_vec = np.zeros((B,), np.int32)
@@ -515,25 +626,91 @@ class ServeEngine:
         temp_vec = np.zeros((B,), np.float32)
         topk_vec = np.full((B,), vocab, np.int32)
         pending = collections.deque(requests)
+        suspended: collections.deque = collections.deque()
+
+        def occupy(s: int, st: _Slot, next_tok: int):
+            slots[s] = st
+            tok_vec[s], pos_vec[s] = next_tok, st.pos
+            req_vec[s], emit_vec[s] = st.req.req_id, st.emitted
+            temp_vec[s], topk_vec[s] = st.req.temperature, st.req.top_k
 
         def retire(s: int):
+            nonlocal cache
             st = slots[s]
             outputs[st.req.req_id] = np.asarray(st.out, np.int32)
             slots[s] = None
+            if paged:
+                cache = self._table.release(cache, s)
 
         def finished(st: _Slot, token: int) -> bool:
             if st.emitted >= st.req.max_new_tokens:
                 return True
             if eos is not None and token == eos:
                 return True
-            return st.pos >= self.max_len    # cache exhausted
+            return st.pos >= self.max_ctx    # logical context exhausted
+
+        def suspend(victim: int):
+            """Preempt a live slot: offload its pages to host."""
+            nonlocal cache
+            st = slots[victim]
+            cache, payload = self._table.offload(cache, victim, st.pos)
+            suspended.append(_Suspended(st.req, st.pos, st.emitted, st.out,
+                                        int(tok_vec[victim]), payload))
+            slots[victim] = None
+            if telemetry is not None:
+                telemetry.record_page_out(st.pos)
+
+        def grow():
+            """Assign the pages this step's writes need; when a pool
+            runs dry, preempt the NEWEST live request — including the
+            grower itself, which then suspends and waits FIFO — so the
+            oldest admitted request is only ever victimized by its own
+            elders (FCFS progress is preserved)."""
+            nonlocal cache
+            order = sorted((s for s in range(B) if slots[s] is not None),
+                           key=lambda s: slots[s].req.req_id)
+            for s in order:
+                if slots[s] is None:
+                    continue                 # preempted by an earlier grower
+                while slots[s] is not None:
+                    cache, ok = self._table.prepare_step(
+                        cache, s, int(pos_vec[s]))
+                    if ok:
+                        break
+                    victims = [v for v in range(B) if slots[v] is not None]
+                    victim = max(victims, key=lambda v: slots[v].req.req_id)
+                    if victim == s and len(victims) == 1:
+                        raise RuntimeError(   # pragma: no cover
+                            "paged cache: resident-page budget exhausted "
+                            "with a single live slot — unreachable when "
+                            "resident_pages covers one full slot")
+                    suspend(victim)
 
         def admit():
             nonlocal cache
             for s in range(B):
-                while slots[s] is None and pending:
-                    req = pending.popleft()
+                while slots[s] is None and (pending or suspended):
+                    if suspended:
+                        # resume FIFO before admitting new work; if the
+                        # oldest suspension cannot fit yet, wait for
+                        # pages (live slots will retire) rather than
+                        # admitting page-hungry new requests around it.
+                        sp = suspended[0]
+                        if not self._table.can_restore(sp.payload):
+                            break
+                        suspended.popleft()
+                        cache = self._table.restore(cache, s, sp.payload)
+                        st = _Slot(sp.req, pos=sp.pos, first_token=0)
+                        st.out, st.emitted = sp.out, sp.emitted
+                        occupy(s, st, sp.next_tok)
+                        if telemetry is not None:
+                            telemetry.record_page_in(sp.payload.tokens)
+                        continue
+                    req = pending[0]
                     plen = req.prompt.shape[0]
+                    if paged and not self._table.can_admit(plen):
+                        break                # wait for pages to free
+                    pending.popleft()
                     bucket = self.buckets.bucket_for(plen)
                     padded = np.zeros((1, bucket), np.int32)
                     padded[0, :plen] = req.prompt
@@ -541,7 +718,11 @@ class ServeEngine:
                     logits, one = self._prefill(
                         self.params, jnp.asarray(padded),
                         jnp.asarray([plen], jnp.int32))
-                    cache = self._insert(cache, one, jnp.asarray(s, jnp.int32))
+                    if paged:
+                        cache = self._table.admit(cache, one, s, plen)
+                    else:
+                        cache = self._insert(cache, one,
+                                             jnp.asarray(s, jnp.int32))
                     key = self._keys(base, np.asarray([req.req_id], np.int32),
                                      np.zeros((1,), np.int32))
                     first = int(np.asarray(sample(
@@ -553,15 +734,20 @@ class ServeEngine:
                         telemetry.record_prefill(
                             plen, time.perf_counter() - t0, padded_len=bucket)
                     st = _Slot(req, pos=plen, first_token=first)
-                    slots[s] = st
-                    tok_vec[s], pos_vec[s] = first, plen
-                    req_vec[s], emit_vec[s] = req.req_id, st.emitted
-                    temp_vec[s], topk_vec[s] = req.temperature, req.top_k
+                    occupy(s, st, first)
                     if finished(st, first):
                         retire(s)           # keep admitting into this slot
 
         admit()
-        while any(st is not None for st in slots):
+        while any(st is not None for st in slots) or suspended or pending:
+            if all(st is None for st in slots):
+                admit()
+                if all(st is None for st in slots):  # pragma: no cover
+                    raise RuntimeError(
+                        "serve stalled: no slot admissible — resident-page "
+                        "budget cannot hold any pending/suspended request")
+            if paged:
+                grow()
             active = [s for s in range(B) if slots[s] is not None]
             ctx = [int(pos_vec[s]) + 1 for s in active]
             t0 = time.perf_counter()

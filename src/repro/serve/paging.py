@@ -1,0 +1,526 @@
+"""Block-table page management for the serving cache.
+
+The model layer defines *what* a paged cache is
+(:class:`repro.models.attention.PagedKVCache` and the recurrent-state
+mirrors); this module owns the page *lifecycle* the paper's energy
+model cares about: which pages are resident, which logical rows they
+hold, and every byte that crosses the accelerator boundary when they
+move.
+
+One :class:`PageTable` manages every cache stream of a model — one KV
+stream per attention pattern position (``groups``/``tail``), one
+state-page stream per recurrent (ssm/rglru) position — so all 10
+architectures serve through the same allocator:
+
+* **allocate-on-write** — admission takes exactly the pages the
+  prompt's rows need (``ceil(min(plen, cache_len)/page_size)`` per KV
+  stream, one state page per recurrent stream); decode allocates a
+  fresh zeroed page only when a slot's write position crosses into an
+  unassigned logical page, so a slot's footprint tracks its actual
+  context, not ``max_ctx``.
+* **free-on-retire** — a retired slot's pages return to the free list
+  and its block-table rows point back at the DUMP page.
+* **offload / restore** — a preempted slot's resident pages are copied
+  to host memory (:func:`jax.device_put` to the CPU backend), freed on
+  device, and later restored bit-identically into freshly allocated
+  pages (the block table re-targets; content is unchanged).  The
+  engine accounts both directions as page-in/page-out traffic
+  (:mod:`repro.serve.telemetry`).
+
+Per-stream pool capacity is ``resident_pages`` + the 2 reserved pages
+(ZERO, DUMP — :mod:`repro.models.attention`).  ``resident_pages`` must
+cover one fully decoded slot (``max(n_logical_pages)`` over streams):
+with that floor, preempting down to a single live slot always frees
+enough pages, so the engine can guarantee forward progress under any
+budget it accepts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (DUMP_PAGE, RESERVED_PAGES, ZERO_PAGE,
+                                    KVCache, PagedKVCache, n_logical_pages,
+                                    paged_kv_view)
+from repro.models.rglru import PagedRGLRUCache, RGLRUCache
+from repro.models.ssm import PagedSSMCache, SSMCache
+from repro.models.transformer import TransformerLM
+
+__all__ = ["PagedCacheConfig", "PageTable", "PagePayload", "logical_view"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Engine-facing knobs of the paged cache.
+
+    ``page_size``       — tokens per KV page (the paper's mapping-policy
+                          granularity: one page == one unit of DRAM-row
+                          placement and of offload traffic).
+    ``resident_pages``  — device-resident page budget per KV stream
+                          (excl. the 2 reserved pages).  When live slots
+                          need more, the engine preempts a victim and
+                          offloads its pages to host.
+    ``max_ctx``         — logical context capacity per slot; ``None``
+                          means the engine's ``max_len``.  May exceed
+                          ``max_len``: decode keeps appending pages past
+                          the prefill cap, which is how requests outgrow
+                          the old contiguous per-slot allocation.
+    """
+
+    page_size: int = 16
+    resident_pages: Optional[int] = None
+    max_ctx: Optional[int] = None
+
+
+class _Stream:
+    """Host-side allocator state of one cache stream."""
+
+    __slots__ = ("where", "kind", "cache_len", "n_lp", "n_pages", "free",
+                 "slot_pages")
+
+    def __init__(self, where, kind, cache_len, n_lp, n_pages):
+        self.where = where            # ("groups", i) | ("tail", i)
+        self.kind = kind
+        self.cache_len = cache_len    # None for state streams
+        self.n_lp = n_lp              # logical pages (1 for state streams)
+        self.n_pages = n_pages        # pool extent incl. reserved pages
+        self.free = list(range(RESERVED_PAGES, n_pages))
+        # KV: {slot: {jdx: pid}}; state: {slot: pid}
+        self.slot_pages: Dict[int, object] = {}
+
+    @property
+    def is_state(self) -> bool:
+        return self.cache_len is None
+
+
+@dataclasses.dataclass
+class PagePayload:
+    """Host-resident copy of one offloaded slot (all streams).
+
+    ``kv[si] = (jdx->row, k_pages, v_pages)`` with contents shaped
+    ``[G?, n_rows, page_size, kv_heads, head_dim]``;
+    ``state[si] = (conv, h)``.  ``tokens`` is the slot's context length
+    at offload time (for traffic accounting).
+    """
+
+    kv: Dict[int, Tuple[Dict[int, int], np.ndarray, np.ndarray]]
+    state: Dict[int, Tuple[np.ndarray, np.ndarray]]
+    tokens: int
+
+    def pages_needed(self) -> Dict[int, int]:
+        return {si: len(jdx_rows) for si, (jdx_rows, _, _) in self.kv.items()}
+
+
+class PageTable:
+    """Page allocator + jitted cache-update ops for one engine.
+
+    All device-side mutation goes through jitted functions whose cache
+    output can be pinned to the decode step's shardings
+    (``cache_shardings``), so the admit/decode/offload round trip stays
+    layout-stable on real meshes.
+    """
+
+    def __init__(self, model: TransformerLM, max_batch: int, max_ctx: int,
+                 page_size: int, resident_pages: Optional[int] = None,
+                 cache_shardings=None):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.model = model
+        self.cfg = model.cfg
+        self.max_batch = int(max_batch)
+        self.max_ctx = int(max_ctx)
+        self.page_size = int(page_size)
+        self._csh = cache_shardings
+
+        self.streams: List[_Stream] = []
+        min_budget = 1
+        for where, kind in self._positions():
+            if kind in ("global", "local"):
+                L = self.cfg.decode_cache_len(kind, self.max_ctx)
+                min_budget = max(min_budget, n_logical_pages(L, page_size))
+        if resident_pages is None:
+            # ample default: every slot fully decoded stays resident
+            resident_pages = min_budget * self.max_batch
+        if resident_pages < min_budget:
+            raise ValueError(
+                f"resident_pages={resident_pages} cannot hold one fully "
+                f"decoded slot ({min_budget} pages of {page_size} tokens "
+                f"for max_ctx={self.max_ctx}); the engine could deadlock "
+                f"with every other slot already offloaded")
+        self.resident_pages = int(resident_pages)
+        self.n_pages = self.resident_pages + RESERVED_PAGES
+
+        for where, kind in self._positions():
+            if kind in ("global", "local"):
+                L = self.cfg.decode_cache_len(kind, self.max_ctx)
+                self.streams.append(_Stream(
+                    where, kind, L, n_logical_pages(L, page_size),
+                    self.n_pages))
+            else:
+                self.streams.append(_Stream(
+                    where, kind, None, 1, self.max_batch + RESERVED_PAGES))
+
+        self.bind_shardings(cache_shardings)
+
+    def bind_shardings(self, cache_shardings=None) -> None:
+        """(Re)build the jitted cache ops, pinning their cache output to
+        ``cache_shardings`` (the decode step's) so the admit/decode/
+        offload round trip is layout-stable on real meshes.  The engine
+        calls this once the decode step — and therefore the cache
+        placement — exists."""
+        self._csh = cache_shardings
+        # donate the cache arg (as the decode step does): these ops
+        # rewrite a slice of the pools, and without donation each admit/
+        # retire/page-assign would copy every pool buffer on device.
+        # fetch must NOT donate — offload reads pages out of a cache
+        # that stays live.
+        kw = {"donate_argnums": (0,)}
+        if cache_shardings is not None:
+            kw["out_shardings"] = cache_shardings
+        self._insert_jit = jax.jit(self._insert_fn, **kw)
+        self._release_jit = jax.jit(self._release_fn, **kw)
+        self._restore_jit = jax.jit(self._restore_fn, **kw)
+        self._assign_jit = {
+            si: jax.jit(lambda c, s, j, p, _si=si: self._assign_fn(_si, c, s, j, p),
+                        **kw)
+            for si, st in enumerate(self.streams) if not st.is_state}
+        self._fetch_jit = {
+            si: (jax.jit(lambda c, pid, _si=si: self._fetch_state_fn(_si, c, pid))
+                 if st.is_state else
+                 jax.jit(lambda c, ids, _si=si: self._fetch_kv_fn(_si, c, ids)))
+            for si, st in enumerate(self.streams)}
+
+    def reset(self) -> None:
+        """Drop all allocations (fresh serve call: every page free)."""
+        for st in self.streams:
+            st.free = list(range(RESERVED_PAGES, st.n_pages))
+            st.slot_pages.clear()
+
+    # ------------------------------------------------------------- structure
+    def _positions(self):
+        for i, kind in enumerate(self.cfg.attn_pattern):
+            yield ("groups", i), kind
+        for i, kind in enumerate(self.cfg.pattern_tail):
+            yield ("tail", i), kind
+
+    def _get(self, cache, where):
+        return cache[where[0]][where[1]]
+
+    @staticmethod
+    def _replace(cache, where, node):
+        top, i = where
+        seq = list(cache[top])
+        seq[i] = node
+        return {**cache, top: tuple(seq)}
+
+    def init_cache(self):
+        return self.model.init_paged_cache(
+            self.max_batch, self.max_ctx, self.page_size, self.n_pages)
+
+    # -------------------------------------------------------------- sizing
+    def kv_pages_for(self, tokens: int, stream: _Stream) -> int:
+        """Pages prefilling ``tokens`` prompt rows writes in a stream
+        (a prompt past the ring length wraps and touches every page)."""
+        return n_logical_pages(
+            min(max(int(tokens), 1), stream.cache_len), self.page_size)
+
+    def can_admit(self, plen: int) -> bool:
+        for st in self.streams:
+            need = 1 if st.is_state else self.kv_pages_for(plen, st)
+            if len(st.free) < need:
+                return False
+        return True
+
+    def free_page_counts(self) -> Dict[Tuple[str, int], int]:
+        return {st.where: len(st.free) for st in self.streams}
+
+    # ------------------------------------------------------------ jitted ops
+    def _insert_fn(self, cache, one, slot, pages):
+        """Scatter a prefilled batch-1 contiguous cache into this
+        slot's freshly assigned pages.  ``pages`` mirrors the stream
+        list: KV entries are ``[n_lp]`` int32 page ids (-1 = logical
+        page left unallocated -> block points at ZERO), state entries
+        are scalar int32 page ids."""
+        for si, st in enumerate(self.streams):
+            pc, oc = self._get(cache, st.where), self._get(one, st.where)
+            grouped = st.where[0] == "groups"
+            if st.is_state:
+                pc = self._ins_state(pc, oc, slot, pages[si], grouped)
+            else:
+                pc = self._ins_kv(pc, oc, slot, pages[si], grouped)
+            cache = self._replace(cache, st.where, pc)
+        return cache
+
+    def _ins_kv(self, pc: PagedKVCache, oc: KVCache, slot, pids, grouped):
+        P, L = pc.page_size, pc.cache_len
+        n_lp = pids.shape[0]
+        write_ids = jnp.where(pids < 0, DUMP_PAGE, pids)
+        pad = n_lp * P - L
+
+        def scat(pool, rows):            # rows: [L, kvh, hd]
+            src = jnp.pad(rows, ((0, pad), (0, 0), (0, 0)))
+            return pool.at[write_ids].set(
+                src.reshape((n_lp, P) + rows.shape[1:]))
+
+        block_row = jnp.where(pids < 0, ZERO_PAGE, pids)
+        if grouped:
+            kp = jax.vmap(scat)(pc.kp, oc.k[:, 0])
+            vp = jax.vmap(scat)(pc.vp, oc.v[:, 0])
+            block = pc.block.at[:, slot].set(block_row)
+        else:
+            kp = scat(pc.kp, oc.k[0])
+            vp = scat(pc.vp, oc.v[0])
+            block = pc.block.at[slot].set(block_row)
+        return dataclasses.replace(
+            pc, kp=kp, vp=vp, block=block,
+            length=jnp.maximum(pc.length, oc.length))
+
+    def _ins_state(self, pc, oc, slot, pid, grouped):
+        if grouped:
+            return dataclasses.replace(
+                pc,
+                conv_p=pc.conv_p.at[:, pid].set(oc.conv[:, 0]),
+                h_p=pc.h_p.at[:, pid].set(oc.h[:, 0]),
+                block=pc.block.at[:, slot].set(pid))
+        return dataclasses.replace(
+            pc,
+            conv_p=pc.conv_p.at[pid].set(oc.conv[0]),
+            h_p=pc.h_p.at[pid].set(oc.h[0]),
+            block=pc.block.at[slot].set(pid))
+
+    def _release_fn(self, cache, slot):
+        """Point every block-table row of ``slot`` back at DUMP."""
+        for si, st in enumerate(self.streams):
+            pc = self._get(cache, st.where)
+            grouped = st.where[0] == "groups"
+            if grouped:
+                block = pc.block.at[:, slot].set(DUMP_PAGE)
+            else:
+                block = pc.block.at[slot].set(DUMP_PAGE)
+            cache = self._replace(cache, st.where,
+                                  dataclasses.replace(pc, block=block))
+        return cache
+
+    def _assign_fn(self, si, cache, slot, jdx, pid):
+        """Assign a zeroed page to logical page ``jdx`` of ``slot``
+        (decode growth: allocate-on-write at a page boundary)."""
+        st = self.streams[si]
+        pc = self._get(cache, st.where)
+        if st.where[0] == "groups":
+            pc = dataclasses.replace(
+                pc,
+                kp=pc.kp.at[:, pid].set(0),
+                vp=pc.vp.at[:, pid].set(0),
+                block=pc.block.at[:, slot, jdx].set(pid))
+        else:
+            pc = dataclasses.replace(
+                pc,
+                kp=pc.kp.at[pid].set(0),
+                vp=pc.vp.at[pid].set(0),
+                block=pc.block.at[slot, jdx].set(pid))
+        return self._replace(cache, st.where, pc)
+
+    def _fetch_kv_fn(self, si, cache, ids):
+        st = self.streams[si]
+        pc = self._get(cache, st.where)
+        if st.where[0] == "groups":
+            return pc.kp[:, ids], pc.vp[:, ids]
+        return pc.kp[ids], pc.vp[ids]
+
+    def _fetch_state_fn(self, si, cache, pid):
+        st = self.streams[si]
+        pc = self._get(cache, st.where)
+        if st.where[0] == "groups":
+            return pc.conv_p[:, pid], pc.h_p[:, pid]
+        return pc.conv_p[pid], pc.h_p[pid]
+
+    def _restore_fn(self, cache, slot, payload):
+        """Write offloaded page contents into freshly assigned pages.
+        ``payload`` mirrors the stream list: KV entries are
+        ``(pids [n_rows], jdxs [n_rows], k_pages, v_pages)`` (pids
+        already allocated), state entries ``(pid, conv, h)``."""
+        for si, st in enumerate(self.streams):
+            pc = self._get(cache, st.where)
+            grouped = st.where[0] == "groups"
+            if st.is_state:
+                pid, conv, h = payload[si]
+                if grouped:
+                    pc = dataclasses.replace(
+                        pc,
+                        conv_p=pc.conv_p.at[:, pid].set(conv),
+                        h_p=pc.h_p.at[:, pid].set(h),
+                        block=pc.block.at[:, slot].set(pid))
+                else:
+                    pc = dataclasses.replace(
+                        pc,
+                        conv_p=pc.conv_p.at[pid].set(conv),
+                        h_p=pc.h_p.at[pid].set(h),
+                        block=pc.block.at[slot].set(pid))
+            else:
+                pids, jdxs, kpg, vpg = payload[si]
+                if grouped:
+                    pc = dataclasses.replace(
+                        pc,
+                        kp=pc.kp.at[:, pids].set(kpg),
+                        vp=pc.vp.at[:, pids].set(vpg),
+                        block=pc.block.at[:, slot, jdxs].set(pids))
+                else:
+                    pc = dataclasses.replace(
+                        pc,
+                        kp=pc.kp.at[pids].set(kpg),
+                        vp=pc.vp.at[pids].set(vpg),
+                        block=pc.block.at[slot, jdxs].set(pids))
+            cache = self._replace(cache, st.where, pc)
+        return cache
+
+    # ----------------------------------------------------------- operations
+    def admit(self, cache, one, slot: int, plen: int):
+        """Allocate pages for a freshly prefilled request and scatter
+        its contiguous batch-1 cache into them."""
+        pages = []
+        for st in self.streams:
+            if st.is_state:
+                pid = st.free.pop()
+                st.slot_pages[slot] = pid
+                pages.append(jnp.asarray(pid, jnp.int32))
+            else:
+                need = self.kv_pages_for(plen, st)
+                pids = [st.free.pop() for _ in range(need)]
+                st.slot_pages[slot] = dict(enumerate(pids))
+                vec = np.full((st.n_lp,), -1, np.int32)
+                vec[:need] = pids
+                pages.append(jnp.asarray(vec))
+        return self._insert_jit(cache, one, jnp.asarray(slot, jnp.int32),
+                                tuple(pages))
+
+    def release(self, cache, slot: int):
+        """Free a retired slot's pages; its block rows return to DUMP."""
+        for st in self.streams:
+            held = st.slot_pages.pop(slot, None)
+            if held is None:
+                continue
+            st.free.extend([held] if st.is_state else held.values())
+        return self._release_jit(cache, jnp.asarray(slot, jnp.int32))
+
+    def prepare_step(self, cache, slot: int, pos: int):
+        """Ensure the page each KV stream will write at ``pos`` is
+        assigned.  Returns ``(cache, ok)``; ``ok`` is False when a pool
+        is exhausted (the engine must preempt a victim and retry)."""
+        for si, st in enumerate(self.streams):
+            if st.is_state:
+                continue
+            jdx = (pos % st.cache_len) // self.page_size
+            held = st.slot_pages[slot]
+            if jdx in held:
+                continue
+            if not st.free:
+                return cache, False
+            pid = st.free.pop()
+            held[jdx] = pid
+            cache = self._assign_jit[si](
+                cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(jdx, jnp.int32), jnp.asarray(pid, jnp.int32))
+        return cache, True
+
+    def offload(self, cache, slot: int, tokens: int):
+        """Copy a slot's resident pages to host, free them on device.
+
+        Returns ``(cache, payload)``.  The host copy is explicit
+        (``jax.device_put`` onto the CPU backend), so the content
+        round-trips through host memory, not a device alias.
+        """
+        host = jax.devices("cpu")[0]
+        kv, state = {}, {}
+        for si, st in enumerate(self.streams):
+            held = st.slot_pages.pop(slot)
+            if st.is_state:
+                conv, h = self._fetch_jit[si](cache, jnp.asarray(held, jnp.int32))
+                state[si] = (np.asarray(jax.device_put(conv, host)),
+                             np.asarray(jax.device_put(h, host)))
+                st.free.append(held)
+            else:
+                jdxs = sorted(held)
+                ids = jnp.asarray([held[j] for j in jdxs], jnp.int32)
+                kpg, vpg = self._fetch_jit[si](cache, ids)
+                kv[si] = (dict(zip(jdxs, range(len(jdxs)))),
+                          np.asarray(jax.device_put(kpg, host)),
+                          np.asarray(jax.device_put(vpg, host)))
+                st.free.extend(held.values())
+        cache = self._release_jit(cache, jnp.asarray(slot, jnp.int32))
+        return cache, PagePayload(kv=kv, state=state, tokens=int(tokens))
+
+    def can_restore(self, payload: PagePayload) -> bool:
+        need = payload.pages_needed()
+        for si, st in enumerate(self.streams):
+            if len(st.free) < (1 if st.is_state else need[si]):
+                return False
+        return True
+
+    def restore(self, cache, slot: int, payload: PagePayload):
+        """Re-admit an offloaded slot: new pages, same bytes."""
+        args = []
+        for si, st in enumerate(self.streams):
+            if st.is_state:
+                pid = st.free.pop()
+                st.slot_pages[slot] = pid
+                conv, h = payload.state[si]
+                args.append((jnp.asarray(pid, jnp.int32),
+                             jnp.asarray(conv), jnp.asarray(h)))
+            else:
+                jdx_rows, kpg, vpg = payload.kv[si]
+                jdxs = list(jdx_rows)
+                pids = [st.free.pop() for _ in range(len(jdxs))]
+                st.slot_pages[slot] = dict(zip(jdxs, pids))
+                args.append((jnp.asarray(pids, jnp.int32),
+                             jnp.asarray(jdxs, jnp.int32),
+                             jnp.asarray(kpg), jnp.asarray(vpg)))
+        return self._restore_jit(cache, jnp.asarray(slot, jnp.int32),
+                                 tuple(args))
+
+
+# ---------------------------------------------------------------------------
+# Test/debug helper
+# ---------------------------------------------------------------------------
+def logical_view(cache):
+    """Resolve a paged cache pytree into the contiguous cache pytree a
+    ``model.init_cache`` decode would carry (KVCache/SSMCache/RGLRUCache
+    with the same ``{'groups', 'tail'}`` structure).
+
+    The paged==contiguous equivalence suite compares this view bitwise
+    against the contiguous engine's cache: values must land in the same
+    slot order for attention to be bit-identical.
+    """
+    def one(node):
+        if isinstance(node, PagedKVCache):
+            if node.block.ndim == 3:      # grouped: [G, ...] leaves
+                k, v = jax.vmap(
+                    lambda kp, vp, blk: paged_kv_view(
+                        dataclasses.replace(node, kp=kp, vp=vp, block=blk))
+                )(node.kp, node.vp, node.block)
+            else:
+                k, v = paged_kv_view(node)
+            return KVCache(k=k, v=v, length=node.length)
+        if isinstance(node, PagedSSMCache):
+            if node.block.ndim == 2:
+                return SSMCache(
+                    conv=jax.vmap(lambda c, b: c[b])(node.conv_p, node.block),
+                    h=jax.vmap(lambda h, b: h[b])(node.h_p, node.block))
+            return SSMCache(conv=node.conv_p[node.block],
+                            h=node.h_p[node.block])
+        if isinstance(node, PagedRGLRUCache):
+            if node.block.ndim == 2:
+                return RGLRUCache(
+                    conv=jax.vmap(lambda c, b: c[b])(node.conv_p, node.block),
+                    h=jax.vmap(lambda h, b: h[b])(node.h_p, node.block))
+            return RGLRUCache(conv=node.conv_p[node.block],
+                              h=node.h_p[node.block])
+        return node
+
+    return {
+        top: tuple(one(node) for node in cache[top])
+        for top in ("groups", "tail")
+    }

@@ -17,6 +17,14 @@ come from a real (smoke-scale) engine run while the *byte magnitudes*
 come from the full-size deployment config — the traffic pattern is
 measured, not hand-built, and the energy numbers still describe the
 production model.
+
+Paged serving adds a third traffic class: page-out/page-in events
+(host offload of a preempted slot's cache pages and their restore —
+:mod:`repro.serve.paging`) convert to whole-page bytes via
+:meth:`TrafficModel.page_bytes` and join the profile as extra DRAM
+reads/writes.  All byte accumulators are exact ints, so the invariant
+"summed per-event bytes == profile x decode steps" holds bit-for-bit
+(test-pinned in ``tests/test_paged_cache.py``).
 """
 from __future__ import annotations
 
@@ -38,7 +46,10 @@ class TrafficModel:
     ``kv_caps`` / ``kv_token_bytes`` carry one entry per attention layer
     (cache slots, K+V bytes per cached token); recurrent (ssm/rglru)
     layers contribute ``state_bytes`` of O(1) per-slot state that is
-    read *and* written every step.
+    read *and* written every step.  ``page_size`` (tokens per KV page,
+    0 = contiguous cache) makes offload traffic page-granular: a slot's
+    pages cover its context rounded up per layer, exactly what the
+    engine moves on preemption.
     """
 
     param_bytes: int            # resident weight bytes (footprint share)
@@ -46,9 +57,11 @@ class TrafficModel:
     kv_caps: Tuple[int, ...]
     kv_token_bytes: Tuple[int, ...]
     state_bytes: int
+    page_size: int = 0
 
     @classmethod
-    def from_config(cls, cfg: ModelConfig, max_len: int) -> "TrafficModel":
+    def from_config(cls, cfg: ModelConfig, max_len: int,
+                    page_size: int = 0) -> "TrafficModel":
         itemsize = _ITEMSIZE[cfg.dtype]
         counts = cfg.param_counts()
         caps, bpt = [], []
@@ -71,6 +84,7 @@ class TrafficModel:
             kv_caps=tuple(caps),
             kv_token_bytes=tuple(bpt),
             state_bytes=state,
+            page_size=int(page_size),
         )
 
     # ------------------------------------------------------------ per event
@@ -89,6 +103,20 @@ class TrafficModel:
     def kv_write_bytes(self) -> int:
         """KV bytes one slot appends per step (one token per layer)."""
         return sum(self.kv_token_bytes)
+
+    def page_bytes(self, ctx: int) -> int:
+        """Bytes one offload/restore of a ``ctx``-token slot moves:
+        every layer's resident pages (context rounded up to whole pages,
+        capped at the layer's cache length) plus the recurrent state
+        pages.  With ``page_size == 0`` the move is row-exact."""
+        p = self.page_size
+        total = self.state_bytes
+        for c, b in zip(self.kv_caps, self.kv_token_bytes):
+            rows = min(ctx, c)
+            if p:
+                rows = -(-rows // p) * p
+            total += rows * b
+        return total
 
 
 class ServeTelemetry:
@@ -114,9 +142,16 @@ class ServeTelemetry:
         self.decode_time_s = 0.0
         self.tokens_generated = 0
         self.max_live = 0
-        self._param_read_bytes = 0.0   # active weights streamed per step
-        self._kv_read_bytes = 0.0      # KV sweeps + recurrent state reads
-        self._write_bytes = 0.0        # KV appends + recurrent state writes
+        self.page_outs = 0             # slot offloads (device -> host)
+        self.page_ins = 0              # slot restores (host -> device)
+        # Byte totals are kept as exact ints so the invariant
+        # "sum(per-event bytes) == profile * decode_steps" is testable
+        # bit-for-bit (floats would round on the way in).
+        self.param_read_bytes_total = 0  # active weights streamed per step
+        self.kv_read_bytes_total = 0     # KV sweeps + recurrent state reads
+        self.write_bytes_total = 0       # KV appends + recurrent state writes
+        self.page_out_bytes_total = 0    # offloaded page bytes (DRAM reads)
+        self.page_in_bytes_total = 0     # restored page bytes (DRAM writes)
 
     # ------------------------------------------------------------- recording
     def record_prefill(self, plen: int, dt: float = 0.0,
@@ -153,11 +188,24 @@ class ServeTelemetry:
         self.decode_time_s += dt
         self.tokens_generated += live
         self.max_live = max(self.max_live, live)
-        self._param_read_bytes += t.param_read_bytes
-        self._kv_read_bytes += t.state_bytes * live \
-            + sum(t.kv_read_bytes(int(round(c * self.ctx_scale)))
-                  for c in ctx_lengths)
-        self._write_bytes += (t.kv_write_bytes + t.state_bytes) * live
+        self.param_read_bytes_total += t.param_read_bytes
+        self.kv_read_bytes_total += t.state_bytes * live \
+            + sum(t.kv_read_bytes(self._scaled(c)) for c in ctx_lengths)
+        self.write_bytes_total += (t.kv_write_bytes + t.state_bytes) * live
+
+    def _scaled(self, ctx: int) -> int:
+        return int(round(ctx * self.ctx_scale))
+
+    def record_page_out(self, ctx: int) -> None:
+        """One slot offload: its resident pages (a ``ctx``-token context)
+        leave device DRAM for host memory."""
+        self.page_outs += 1
+        self.page_out_bytes_total += self.traffic.page_bytes(self._scaled(ctx))
+
+    def record_page_in(self, ctx: int) -> None:
+        """One slot restore: the offloaded pages stream back in."""
+        self.page_ins += 1
+        self.page_in_bytes_total += self.traffic.page_bytes(self._scaled(ctx))
 
     # ------------------------------------------------------------- reporting
     @property
@@ -187,9 +235,11 @@ class ServeTelemetry:
             + self.max_live * self.traffic.cache_slot_bytes
         return from_decode(
             name,
-            param_read_bytes=self._param_read_bytes / n,
-            kv_read_bytes=self._kv_read_bytes / n,
-            kv_write_bytes=self._write_bytes / n,
+            param_read_bytes=self.param_read_bytes_total / n,
+            kv_read_bytes=self.kv_read_bytes_total / n,
+            kv_write_bytes=self.write_bytes_total / n,
+            page_out_bytes=self.page_out_bytes_total / n,
+            page_in_bytes=self.page_in_bytes_total / n,
             footprint_bytes=footprint,
             step_period_s=period,
             row_utilization=row_utilization,

@@ -1,0 +1,77 @@
+"""Regression pin for the Fig. 12 density-scaling curve
+(benchmarks/fig12_scaling).
+
+fig10/fig11 have been pinned since PR 1/PR 3; this pins the refresh
+share of DRAM energy vs chip density.  Two layers of assertion per
+density point of the peak-bandwidth streaming setup:
+
+* a tight pin (±0.02) on the CURRENT calibration of the baseline
+  refresh share, so silent drift in the energy model is caught by CI;
+* the paper's Section VI-D claims: the baseline share grows
+  monotonically with density toward ~46-47% at 64 Gb (current
+  calibration 0.495, within the ±0.05 paper band), while RTC-enabled
+  DRAM nearly eliminates refresh for this CNN-style workload at every
+  density.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.allocator import allocate_workload
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import FIG12_DENSITIES_GBIT, chip
+from repro.core.energy import dram_power
+from repro.core.rtc import Variant, evaluate
+from repro.core.workload import from_cnn
+
+PEAK_BW = 51.2e9   # B/s — matches benchmarks/fig12_scaling.py
+
+# density (Gbit) -> (baseline refresh share, rtc refresh share)
+EXPECTED = {
+    2: (0.030, 0.0),
+    4: (0.059, 0.0),
+    8: (0.111, 0.0),
+    16: (0.199, 0.0),
+    32: (0.331, 0.0),
+    64: (0.495, 0.0),
+}
+CALIBRATION_TOL = 0.02
+PAPER_64GB_SHARE = 0.46
+PAPER_TOL = 0.05
+
+
+def _shares(gbit: int):
+    spec = chip(gbit, peak_bw_bytes=PEAK_BW)
+    base_cnn = from_cnn(CNN_ZOO["alexnet"], fps=60)
+    w = dataclasses.replace(
+        base_cnn,
+        name=f"peakbw@{gbit}Gb",
+        read_bytes_per_iter=PEAK_BW * base_cnn.iter_period_s * 0.9,
+        write_bytes_per_iter=PEAK_BW * base_cnn.iter_period_s * 0.1,
+    )
+    baseline = dram_power(spec, w).refresh_fraction
+    alloc = allocate_workload(
+        spec, {"data": min(w.footprint_bytes, spec.capacity_bytes)})
+    rtc = evaluate(spec, w, Variant.FULL_RTC_PLUS, alloc)
+    return baseline, rtc.policy.refresh / rtc.policy.total
+
+
+@pytest.mark.parametrize("gbit", sorted(EXPECTED))
+def test_fig12_refresh_share_pinned(gbit):
+    base, rtc = _shares(gbit)
+    exp_base, exp_rtc = EXPECTED[gbit]
+    assert base == pytest.approx(exp_base, abs=CALIBRATION_TOL), (
+        f"{gbit}Gb: baseline refresh share drifted from pinned "
+        f"calibration: {base:.3f} vs {exp_base:.3f}")
+    assert rtc == pytest.approx(exp_rtc, abs=CALIBRATION_TOL), (
+        f"{gbit}Gb: RTC refresh share drifted: {rtc:.3f} vs {exp_rtc:.3f}")
+
+
+def test_fig12_monotonic_growth_and_paper_anchor():
+    """Refresh share grows with density; RTC keeps it near zero at every
+    density; the 64 Gb baseline lands in the paper's ~46-47% band."""
+    shares = {g: _shares(g) for g in FIG12_DENSITIES_GBIT}
+    bases = [shares[g][0] for g in FIG12_DENSITIES_GBIT]
+    assert bases == sorted(bases)
+    assert all(rtc < 0.02 for _, rtc in shares.values())
+    assert shares[64][0] == pytest.approx(PAPER_64GB_SHARE, abs=PAPER_TOL)

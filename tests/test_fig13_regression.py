@@ -1,0 +1,82 @@
+"""Regression pin for the Fig. 13 beyond-CNN applications
+(benchmarks/fig13_other_apps).
+
+Two layers of assertion per (app, module) cell:
+
+* a tight pin (±0.02) on the CURRENT calibration of full-RTC+ DRAM
+  energy savings, so silent drift in the energy/allocator models is
+  caught by CI;
+* the paper's Section VI-E structure: Eigenfaces benefits from both
+  mechanisms (PAAR share growing with capacity); BCPNN's fully-allocated
+  4x-per-iteration sweep makes RTT the winner and PAAR nearly useless;
+  BFAST's random index walks are not AGU-expressible, so RTT is
+  bypassed entirely (exactly zero) and total savings stay ~0.
+"""
+import pathlib
+import sys
+
+import pytest
+
+from repro.core.allocator import allocate_workload
+from repro.core.dram import module
+from repro.core.rtc import Variant, evaluate, rtt_paar_split
+
+# the app workload definitions live in the benchmark (one source of
+# truth); the repo root is not on sys.path under pytest's import mode
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.fig13_other_apps import apps  # noqa: E402
+
+# (app, dram_gb) -> full-RTC+ savings, current calibration
+EXPECTED = {
+    ("eigenfaces", 2): 0.653,
+    ("bcpnn", 2): 0.395,
+    ("bfast", 2): 0.017,
+    ("eigenfaces", 4): 0.794,
+    ("bcpnn", 4): 0.395,
+    ("bfast", 4): 0.018,
+    ("eigenfaces", 8): 0.879,
+    ("bcpnn", 8): 0.395,
+    ("bfast", 8): 0.019,
+}
+CALIBRATION_TOL = 0.02
+
+
+def _cells():
+    rows = {}
+    for cap_gb in (2, 4, 8):
+        spec = module(cap_gb)
+        for w in apps(spec):
+            alloc = allocate_workload(spec, {"data": w.footprint_bytes})
+            rep = evaluate(spec, w, Variant.FULL_RTC_PLUS, alloc)
+            rtt, paar = rtt_paar_split(spec, w, alloc)
+            rows[(w.name, cap_gb)] = (rep.dram_savings, rtt, paar)
+    return rows
+
+
+@pytest.fixture(scope="module")
+def cells():
+    return _cells()
+
+
+@pytest.mark.parametrize("app,gb", sorted(EXPECTED))
+def test_fig13_savings_pinned(cells, app, gb):
+    got, _, _ = cells[(app, gb)]
+    assert got == pytest.approx(EXPECTED[(app, gb)], abs=CALIBRATION_TOL), (
+        f"{app}@{gb}GB full-RTC+ drifted from pinned calibration: "
+        f"{got:.3f} vs {EXPECTED[(app, gb)]:.3f}")
+
+
+def test_fig13_mechanism_split(cells):
+    """Section VI-E per-app structure (see module docstring)."""
+    for gb in (2, 4, 8):
+        rtc, rtt, paar = cells[("eigenfaces", gb)]
+        # RTC+ stacks both mechanisms for this re-reading streamer
+        assert rtc == pytest.approx(rtt + paar, abs=1e-6)
+        _, b_rtt, b_paar = cells[("bcpnn", gb)]
+        assert b_rtt > 5 * b_paar        # RTT dominates, PAAR ~useless
+        f_rtc, f_rtt, _ = cells[("bfast", gb)]
+        assert f_rtt == 0.0              # irregular: RTT bypassed
+        assert f_rtc < 0.05              # "the RTC circuitry is bypassed"
+    # PAAR share of eigenfaces grows with module capacity
+    paars = [cells[("eigenfaces", gb)][2] for gb in (2, 4, 8)]
+    assert paars == sorted(paars)

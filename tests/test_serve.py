@@ -204,6 +204,23 @@ def test_empty_prompt_validation(qwen, engine):
         engine.serve([np.zeros((33,), np.int32)], 4)
 
 
+def test_oversized_prompt_names_request_and_lengths(engine, mixed_prompts):
+    """An over-long prompt must be rejected UP FRONT with the offending
+    request index and both lengths in the message — not fail opaquely
+    inside PrefillBuckets.bucket_for mid-serve, after other requests
+    already ran."""
+    bad = np.zeros((40,), np.int32)          # engine max_len is 32
+    hits_before = dict(engine.buckets.hits)
+    with pytest.raises(ValueError,
+                       match=r"prompt 2 has length 40.*bucket 32"):
+        engine.serve([mixed_prompts[0], mixed_prompts[1], bad], 4)
+    # validation ran before any prefill: nothing was served or recorded
+    assert engine.buckets.hits == hits_before
+    # the index is the caller's position, also for empty prompts
+    with pytest.raises(ValueError, match="index 1"):
+        engine.serve([mixed_prompts[0], np.zeros((0,), np.int32)], 4)
+
+
 # ---------------------------------------------------------------------------
 # telemetry -> WorkloadProfile -> RTC
 # ---------------------------------------------------------------------------

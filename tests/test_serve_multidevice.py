@@ -14,6 +14,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+# CI runs this module in the serve-smoke job (it spawns a subprocess
+# engine sweep); the tier-1 jobs deselect it with -m "not slow_serve".
+pytestmark = pytest.mark.slow_serve
+
 _SCRIPT = r"""
 import os
 # the forced device count only applies to the host (CPU) platform --
@@ -28,7 +34,7 @@ from jax.sharding import Mesh
 from repro.configs import get_config
 from repro.dist.sharding import ShardingPolicy
 from repro.models.transformer import TransformerLM
-from repro.serve import ServeEngine
+from repro.serve import PagedCacheConfig, ServeEngine
 
 assert len(jax.devices()) == 2, jax.devices()
 cfg = get_config("qwen1.5-0.5b", smoke=True)
@@ -51,6 +57,18 @@ out_solo = solo.serve(prompts, 5, temperature=temps, top_k=topks, seed=7)
 for i, (a, b) in enumerate(zip(out_mesh, out_solo)):
     np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
 assert meshed.prefill_executables <= len(meshed.buckets.ladder)
+
+# paged cache on the same mesh: pool page dim shards over the 2-device
+# data axis (8 pages % 2 == 0), block-table gathers lower through
+# GSPMD, and a budget tight enough to force offload mid-serve must
+# still reproduce the solo generations bit-for-bit
+paged = ServeEngine(model, params, max_len=32, max_batch=2,
+                    mesh=mesh, policy=policy,
+                    paged=PagedCacheConfig(page_size=8, resident_pages=6))
+out_paged = paged.serve(prompts, 12, temperature=temps, top_k=topks, seed=7)
+out_ref = solo.serve(prompts, 12, temperature=temps, top_k=topks, seed=7)
+for i, (a, b) in enumerate(zip(out_paged, out_ref)):
+    np.testing.assert_array_equal(a, b, err_msg=f"paged request {i}")
 print("MULTIDEVICE_SERVE_OK", flush=True)
 """
 
