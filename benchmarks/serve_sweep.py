@@ -1,0 +1,131 @@
+"""Serve decode-timing sweep: paged gather vs Pallas block-table kernel.
+
+The perf-trajectory harness CI has been missing: serves an identical
+mixed-length workload through two paged engines — ``decode_backend=
+"gather"`` (materializes the contiguous logical view every step) and
+``"pallas_paged"`` (the :mod:`repro.kernels.paged_attention` kernel
+reading pages in place, interpret mode on CPU) — and records per-arch
+decode steps/sec plus the telemetry byte split (row-exact KV sweep vs
+phantom gather traffic vs per-page kernel reads).  Results land in
+``BENCH_serve.json`` (schema below), which the CI ``kernels`` job
+uploads as a workflow artifact so the numbers accumulate a trajectory
+across PRs instead of staying empty.
+
+Absolute CPU timings are hardware noise; the schema keeps them anyway
+(trajectory > precision) next to the byte accounting, which is exact.
+Generations are asserted identical across backends on every swept arch
+— the bench doubles as a parity smoke.
+
+Schema (``BENCH_serve.json``)::
+
+    {"schema": "serve-decode-v1",
+     "rows": [{"arch", "batch", "backend", "decode_steps",
+               "steps_per_sec", "tok_per_sec",
+               "kv_read_bytes_per_step", "gather_bytes_per_step",
+               "page_size"}, ...]}
+
+    python benchmarks/serve_sweep.py [--archs all] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+if __package__ in (None, ""):
+    import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import ARCH_IDS, get_config
+from repro.models.transformer import TransformerLM
+from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
+                         TrafficModel)
+
+# Default sweep: one arch per cache family (dense GQA append, softcap +
+# local/global ring mix, recurrent state pages) keeps the CI step small;
+# --archs all covers the zoo.
+DEFAULT_ARCHS = ("qwen1.5-0.5b", "gemma2-9b", "recurrentgemma-2b")
+PROMPT_LENS = (4, 9, 6, 12)
+SERVE_CTX = 4096      # deployment context for the byte constants
+
+
+def sweep_arch(arch: str, max_batch: int, new_tokens: int,
+               page_size: int) -> list:
+    smoke = get_config(arch, smoke=True)
+    model = TransformerLM(smoke)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, smoke.vocab_size, (n,)).astype(np.int32)
+               for n in PROMPT_LENS]
+    traffic = TrafficModel.from_config(get_config(arch), max_len=SERVE_CTX,
+                                       page_size=page_size)
+    rows, outs = [], {}
+    engine_len = 16 + new_tokens
+    for backend in ("gather", "pallas_paged"):
+        engine = ServeEngine(
+            model, params, max_len=engine_len, max_batch=max_batch,
+            paged=PagedCacheConfig(page_size=page_size),
+            decode_backend=backend)
+        # ctx_scale maps the smoke engine's occupancies onto SERVE_CTX
+        # so the row-exact KV sweep and the (occupancy-independent)
+        # gather view bytes describe the same deployment context.
+        tele = ServeTelemetry(traffic, ctx_scale=SERVE_CTX / engine_len)
+        # warm the executables so steps/sec measures the loop, not tracing
+        engine.serve([prompts[0]], 2, seed=1)
+        outs[backend] = engine.serve(prompts, new_tokens, seed=7,
+                                     telemetry=tele)
+        n = max(tele.decode_steps, 1)
+        rows.append({
+            "arch": arch,
+            "batch": max_batch,
+            "backend": backend,
+            "decode_steps": tele.decode_steps,
+            "steps_per_sec": (tele.decode_steps / tele.decode_time_s
+                              if tele.decode_time_s > 0 else 0.0),
+            "tok_per_sec": tele.decode_tok_per_s,
+            "kv_read_bytes_per_step": tele.kv_read_bytes_total // n,
+            "gather_bytes_per_step": (tele.gather_read_bytes_total
+                                      + tele.gather_write_bytes_total) // n,
+            "page_size": page_size,
+        })
+    for i, (a, b) in enumerate(zip(outs["gather"], outs["pallas_paged"])):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{arch} request {i}: kernel generations "
+                          f"diverged from gather")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(DEFAULT_ARCHS),
+                    help="comma-separated arch ids, or 'all'")
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.archs == "all" else \
+        tuple(a.strip() for a in args.archs.split(",") if a.strip())
+
+    rows = []
+    for arch in archs:
+        rows.extend(sweep_arch(arch, args.max_batch, args.new_tokens,
+                               args.page_size))
+    for r in rows:
+        us = 1e6 / r["steps_per_sec"] if r["steps_per_sec"] else 0.0
+        emit(f"serve_decode_{r['arch']}_{r['backend']}", us,
+             f"steps/s={r['steps_per_sec']:.2f} "
+             f"kv_read/step={r['kv_read_bytes_per_step']} "
+             f"gather/step={r['gather_bytes_per_step']}")
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump({"schema": "serve-decode-v1", "rows": rows}, f, indent=1)
+    print(f"wrote {out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

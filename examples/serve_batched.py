@@ -47,7 +47,14 @@ def main():
     ap.add_argument("--resident-pages", type=int, default=None,
                     help="device page budget per KV stream; tight values "
                          "force host offload (paged mode)")
+    ap.add_argument("--decode-backend", default="gather",
+                    choices=("gather", "pallas_paged"),
+                    help="paged attention path: materialize the logical "
+                         "view (gather) or read pages in place through "
+                         "the block-table Pallas kernel (pallas_paged)")
     args = ap.parse_args()
+    if args.decode_backend == "pallas_paged" and not args.paged:
+        ap.error("--decode-backend pallas_paged requires --paged")
 
     cfg = get_config(args.arch, smoke=True)
     model = TransformerLM(cfg)
@@ -57,7 +64,8 @@ def main():
                              resident_pages=args.resident_pages) \
         if args.paged else None
     engine = ServeEngine(model, params, max_len=max_len,
-                         max_batch=args.max_batch, paged=paged)
+                         max_batch=args.max_batch, paged=paged,
+                         decode_backend=args.decode_backend)
 
     # energy accounting uses the full-size config's byte constants, with
     # the smoke run's per-slot occupancies extrapolated to the
@@ -91,6 +99,16 @@ def main():
               f"{tele.page_outs} offloads / {tele.page_ins} restores "
               f"({tele.page_out_bytes_total + tele.page_in_bytes_total:,} "
               f"deployment-scale bytes of page traffic)")
+        phantom = tele.gather_read_bytes_total + tele.gather_write_bytes_total
+        if args.decode_backend == "pallas_paged":
+            print(f"decode backend pallas_paged: per-page KV + recurrent-"
+                  f"state reads only ({tele.kv_read_bytes_total:,} bytes), "
+                  f"no materialized-view traffic")
+        else:
+            print(f"decode backend gather: {phantom:,} bytes of "
+                  f"materialized-view traffic on top of the "
+                  f"{tele.kv_read_bytes_total:,}-byte KV + state sweep "
+                  f"(the copy the pallas_paged kernel never makes)")
     print(f"sample continuation: {outs[0][:10].tolist()}")
 
     # RTC on THIS loop (weights in LPDDR-class memory, edge serving):

@@ -91,6 +91,15 @@ class ShardingPolicy:
         GSPMD then turns the block-table gather into the cross-device
         page fetch.  Unknown mesh sizes or indivisible pools replicate,
         which always lowers.
+
+        This spec is the *signature* placement of the decode step
+        regardless of its attention backend: the gather path's
+        block-table indexing partitions natively, while the
+        ``pallas_paged`` kernel (an opaque call with no GSPMD
+        partitioning rule) has its operands gathered/re-sharded around
+        the call — the pool still lives sharded between steps, so page
+        residency and donation behave identically on real meshes
+        (mesh==solo pinned in ``tests/test_serve_multidevice.py``).
         """
         dsize = self.data_size
         if dsize and dsize > 1 and n_pages % dsize == 0:

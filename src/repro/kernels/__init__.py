@@ -1,3 +1,65 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the reproduction's compute hot-spots.
+
+Each kernel is a package of three modules — ``kernel.py`` (the Pallas
+TPU implementation, runnable in interpret mode on CPU so CI validates
+it without hardware), ``ref.py`` (a pure-jnp oracle with the same
+feature set), and ``ops.py`` (the public op with ``backend="pallas" |
+"ref"`` dispatch).  The kernel CI job runs every package's parity suite
+in interpret mode.
+
+Packages
+--------
+``flash_attention``
+    Tiled online-softmax attention for training/prefill (GQA, causal,
+    sliding-window, softcap).  Sequences that don't tile are padded to
+    the block grid and sliced back (padded keys sit past every real
+    query causally; padded query rows are discarded).
+``rate_match``
+    Algorithm-1 transfer-schedule bits.
+``refresh_sim``
+    Retention-window age update of the refresh simulator.
+``paged_attention``
+    Decode attention that consumes the serving cache's block tables
+    *directly* — the RTC argument applied to the serving hot path.
+
+Paged-attention design note (PR 5)
+----------------------------------
+The paged serving cache (:class:`repro.models.attention.PagedKVCache`)
+stores K/V rows in fixed-size pages of a shared pool behind a per-slot
+block table.  The pure-JAX decode path materializes the contiguous
+logical view every step (``paged_kv_view``: a ``cache_len``-row gather
+per attention layer), which is precisely the predictable-but-wasted
+memory traffic the paper's refresh-triggered access management
+eliminates — the data already sits in DRAM in a layout an address
+generator can walk, so copying it into a contiguous staging buffer
+buys nothing.
+
+The kernel removes the copy:
+
+* **Grid layout** — ``(batch_slot, kv_head, logical_page)`` with the
+  page axis innermost.  TPU grids are sequential over the last
+  dimension, so the online-softmax state (running max, running sum,
+  fp32 output accumulator) lives in VMEM scratch across one slot+head's
+  page walk, exactly like the flash kernel's KV-block axis.
+* **Block-table index map** — the block table and per-slot positions
+  are scalar-prefetch operands
+  (:class:`~jax.experimental.pallas.tpu.PrefetchScalarGridSpec`); the
+  K/V BlockSpec index maps evaluate ``block[b, j]`` so the pipeline
+  DMAs exactly one pool page HBM->VMEM per grid step, in block-table
+  order.  Ring/append validity, sliding windows, softcap, and the
+  partial tail page are reconstructed in-kernel from ``pos`` alone
+  (matching ``attention._cache_positions``), and pages with no valid
+  row take a block-level early exit.
+* **Why no gather** — the gather costs a full logical-view read+write
+  per layer per step regardless of context occupancy and defeats the
+  energy model's point (telemetry now accounts that phantom traffic on
+  the gather path and only true per-page reads on the kernel path).
+  The kernel's traffic is ``ceil(ctx/page_size)`` pages per layer —
+  the minimum the block-table indirection permits.
+
+Engine-side selection: ``ServeEngine(decode_backend="pallas_paged")``
+(default ``"gather"``); generations are identical across backends on
+all 10 archs (interpret-mode parity is accumulation-order tolerant on
+logits, bit-exact on sampled tokens — pinned in
+``tests/test_paged_attention_kernel.py``).
+"""

@@ -12,6 +12,9 @@ TPU-native tiling of the FlashAttention recurrence:
 * causal + sliding-window masks use *block-level early exit*
   (``pl.when`` over the block index) so fully-masked tiles spend no
   MXU cycles — matching the banded FLOP count of the jnp reference;
+* sequences that don't tile are padded to the block grid and sliced
+  back (padded keys masked in-kernel via ``kv_len``; padded query rows
+  discarded), so any (seq, q_block, kv_block) combination lowers;
 * fp32 accumulation, bf16/f32 inputs.
 
 VMEM per step: q tile (q_blk*hd*4) + K/V tiles (2*kv_blk*hd*2) +
@@ -37,7 +40,8 @@ _NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             q_block: int, kv_block: int, n_kv_blocks: int, causal: bool,
-            window: Optional[int], softcap: Optional[float]):
+            window: Optional[int], softcap: Optional[float],
+            kv_len: Optional[int]):
     qb = pl.program_id(2)
     kvb = pl.program_id(3)
 
@@ -56,6 +60,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         live &= kv_start <= q_start + q_block - 1
     if window is not None:
         live &= kv_start + kv_block > q_start - window + 1
+    if kv_len is not None:
+        live &= kv_start < kv_len        # block entirely in tile padding
 
     @pl.when(live)
     def _step():
@@ -73,6 +79,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             mask &= kj <= qi
         if window is not None:
             mask &= kj > qi - window
+        if kv_len is not None:
+            mask &= kj < kv_len          # keys in the tile padding
         s = jnp.where(mask, s, _NEG_INF)
 
         m_prev = m_ref[...]
@@ -111,23 +119,34 @@ def flash_attention(
 ) -> jnp.ndarray:
     b, sq, h, hd = q.shape
     skv, kvh = k.shape[1], k.shape[2]
-    q_block = min(q_block, sq)
-    kv_block = min(kv_block, skv)
-    if sq % q_block or skv % kv_block:
-        raise ValueError(f"seq lens ({sq},{skv}) must tile "
-                         f"({q_block},{kv_block})")
     if h % kvh:
         raise ValueError("n_heads must be a multiple of n_kv_heads")
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    # Sequences that don't tile are padded up to the block grid and the
+    # result sliced back: padded KEYS are masked in-kernel (``kv_len``
+    # bounds ``kj`` — causality alone would leave them visible to the
+    # padded query rows, and non-causal calls to everyone); padded QUERY
+    # rows compute garbage that the final slice discards.
+    pad_q = (-sq) % q_block
+    pad_kv = (-skv) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    sq_p, skv_p = sq + pad_q, skv + pad_kv
     group = h // kvh
-    n_kv = skv // kv_block
+    n_kv = skv_p // kv_block
 
     kern = functools.partial(
         _kernel, q_block=q_block, kv_block=kv_block, n_kv_blocks=n_kv,
-        causal=causal, window=window, softcap=softcap)
+        causal=causal, window=window, softcap=softcap,
+        kv_len=skv if pad_kv else None)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(b, h, sq // q_block, n_kv),
+        grid=(b, h, sq_p // q_block, n_kv),
         in_specs=[
             pl.BlockSpec((1, q_block, 1, hd),
                          lambda ib, ih, iq, ikv: (ib, iq, ih, 0)),
@@ -138,7 +157,7 @@ def flash_attention(
         ],
         out_specs=pl.BlockSpec((1, q_block, 1, hd),
                                lambda ib, ih, iq, ikv: (ib, iq, ih, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, sq_p, h, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((q_block,), jnp.float32),      # running max
             pltpu.VMEM((q_block,), jnp.float32),      # running sum
@@ -146,3 +165,4 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :sq] if pad_q else out

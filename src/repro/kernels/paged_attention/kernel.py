@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: paged decode attention over block-table K/V pools.
+
+The serving cache (:class:`repro.models.attention.PagedKVCache`) keeps
+K/V rows in fixed-size pages of a shared pool, indirected per batch
+slot through a block table.  The pure-JAX decode path resolves that
+indirection by *materializing* the whole contiguous logical view every
+step (``paged_kv_view``: a ``cache_len``-row gather per layer per
+step) — exactly the avoidable off-chip traffic the RTC paper's
+access-management argument targets.  This kernel consumes the block
+table directly:
+
+* ``grid = (batch, kv_heads, n_logical_pages)`` with the page axis
+  innermost: TPU grids execute sequentially over the last dimension,
+  so the online-softmax running state (max, sum, accumulator) lives in
+  VMEM scratch across the pages of one (slot, kv_head) walk;
+* the block table and per-slot positions ride in as **scalar
+  prefetch** (:class:`~jax.experimental.pallas.tpu.PrefetchScalarGridSpec`):
+  the K/V BlockSpec index maps read ``block[b, j]`` to DMA exactly one
+  pool page HBM->VMEM per grid step — the gather never exists, pages
+  stream through on-chip memory in block-table order;
+* ring/append semantics, sliding windows, and softcap are enforced
+  in-kernel from ``pos`` alone: logical slot ``s`` of page ``j`` holds
+  absolute position ``pos - ((pos % cache_len - s) % cache_len)``
+  (negative = never written), matching ``attention._cache_positions``;
+  the partial tail page (``cache_len % page_size != 0``) masks its
+  out-of-range rows the same way;
+* pages with no valid row (unwritten ZERO pages, fully out-of-window
+  pages) take a block-level early exit — no MXU cycles, mirroring the
+  banded FLOP count of the jnp path;
+* fp32 accumulation; one query token per slot (decode).
+
+VMEM per step: q tile (g*hd*4) + K/V pages (2*page_size*hd*bytes) +
+scores (g*page_size*4) + scratch (g*(hd+2)*4) — tiny next to the
+flash-attention prefill tiles; the page size is the streaming quantum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(block_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            page_size: int, cache_len: int, n_lp: int,
+            window: Optional[int], softcap: Optional[float]):
+    ib = pl.program_id(0)
+    ij = pl.program_id(2)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Validity of this page's rows, from the slot position alone.
+    # Logical slot ls holds absolute position pos - ((pos%L - ls) % L);
+    # negative means never written (ZERO page reads land here), ls >=
+    # cache_len is the partial tail page's padding.
+    pos = pos_ref[ib]
+    ls = ij * page_size + jax.lax.iota(jnp.int32, page_size)
+    kv_pos = pos - ((pos % cache_len - ls) % cache_len)
+    valid = (ls < cache_len) & (kv_pos >= 0)
+    if window is not None:
+        valid &= kv_pos > pos - window
+
+    @pl.when(jnp.any(valid))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # [g, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # [page_size, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        hd = q.shape[-1]
+        s = (q @ k.T) * (hd ** -0.5)                  # [g, page_size]
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid[None, :], s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+
+    @pl.when(ij == n_lp - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cache_len", "window", "softcap", "interpret"),
+)
+def paged_decode_attention(
+    q: jnp.ndarray,        # [b, kv_heads, group, head_dim] post-RoPE query
+    kp: jnp.ndarray,       # [n_pages, page_size, kv_heads, head_dim] pool
+    vp: jnp.ndarray,
+    block: jnp.ndarray,    # [b, n_logical_pages] int32 pool page ids
+    pos: jnp.ndarray,      # [b] int32 absolute position being decoded
+    *,
+    cache_len: int,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One-token GQA attention reading K/V pages in place.
+
+    Returns [b, kv_heads, group, head_dim] — the same layout the gather
+    path's grouped einsum produces before the head reshape.  Dead batch
+    slots (block tables pointing at the DUMP page) return garbage rows
+    exactly as the gather path does; the engine ignores them.
+    """
+    b, kvh, g, hd = q.shape
+    n_lp = block.shape[1]
+    page_size = kp.shape[1]
+    if n_lp * page_size < cache_len:
+        raise ValueError(
+            f"block table covers {n_lp} pages x {page_size} rows "
+            f"< cache_len {cache_len}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_lp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda ib, ik, ij, blk, ps: (ib, ik, 0, 0)),
+            # THE point of the kernel: the index map resolves the block
+            # table, so each grid step DMAs exactly one pool page.
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda ib, ik, ij, blk, ps: (blk[ib, ij], 0, ik, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda ib, ik, ij, blk, ps: (blk[ib, ij], 0, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda ib, ik, ij, blk, ps: (ib, ik, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),        # running max
+            pltpu.VMEM((g,), jnp.float32),        # running sum
+            pltpu.VMEM((g, hd), jnp.float32),     # output accumulator
+        ],
+    )
+    kern = functools.partial(
+        _kernel, page_size=page_size, cache_len=cache_len, n_lp=n_lp,
+        window=window, softcap=softcap)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(block, pos, q, kp, vp)

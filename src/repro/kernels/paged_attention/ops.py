@@ -1,0 +1,42 @@
+"""Public op: paged decode attention with backend dispatch.
+
+``paged_attention(..., backend="pallas")`` runs the block-table Pallas
+kernel (interpret mode on CPU); ``backend="ref"`` runs the gather +
+dense-softmax jnp oracle.  The model layer
+(``repro.models.attention.attn_decode``) calls this op when the serving
+engine selects ``decode_backend="pallas_paged"``; the oracle is the
+parity anchor for the kernel test sweep.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention
+from repro.kernels.paged_attention.ref import paged_decode_ref
+
+__all__ = ["paged_attention"]
+
+
+def paged_attention(
+    q: jnp.ndarray,        # [b, kv_heads, group, head_dim]
+    kp: jnp.ndarray,       # [n_pages, page_size, kv_heads, head_dim]
+    vp: jnp.ndarray,
+    block: jnp.ndarray,    # [b, n_logical_pages] int32
+    pos: jnp.ndarray,      # [b] int32
+    *,
+    cache_len: int,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    backend: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    if backend == "ref":
+        return paged_decode_ref(q, kp, vp, block, pos, cache_len=cache_len,
+                                window=window, softcap=softcap)
+    if backend == "pallas":
+        return paged_decode_attention(q, kp, vp, block, pos,
+                                      cache_len=cache_len, window=window,
+                                      softcap=softcap, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

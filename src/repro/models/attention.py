@@ -283,7 +283,8 @@ def paged_kv_view(cache: PagedKVCache):
     return k[:, :cache.cache_len], v[:, :cache.cache_len]
 
 
-def attn_decode(params, cfg: ModelConfig, x, cache, pos, kind: str):
+def attn_decode(params, cfg: ModelConfig, x, cache, pos, kind: str,
+                backend: str = "gather"):
     """One-token decode. x: [b, 1, d]; pos: [] or [b] int32 absolute
     position (vector = per-slot positions for continuous batching).
 
@@ -293,7 +294,18 @@ def attn_decode(params, cfg: ModelConfig, x, cache, pos, kind: str):
     the attention math runs on the same ``[b, cache_len]`` slot layout
     either way (paged caches gather their pages into it), so the two
     forms decode bit-identically.
+
+    ``backend`` (paged caches only): ``"gather"`` materializes the
+    contiguous logical view each step (bit-identical to the contiguous
+    cache); ``"pallas_paged"`` runs the Pallas decode kernel
+    (:mod:`repro.kernels.paged_attention`) that reads K/V pages through
+    the block-table indirection in place — no gathered view is ever
+    materialized.  The kernel mirrors the gather math up to
+    accumulation order (online softmax over pages), so generations are
+    identical while logits agree to interpret-mode tolerance.
     """
+    if backend not in ("gather", "pallas_paged"):
+        raise ValueError(f"unknown decode backend {backend!r}")
     q, k_new, v_new = _project_qkv(params, cfg, x)
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -303,14 +315,18 @@ def attn_decode(params, cfg: ModelConfig, x, cache, pos, kind: str):
     k_new = rope(k_new, posv, cfg.rope_theta)
 
     paged = isinstance(cache, PagedKVCache)
+    if backend == "pallas_paged" and not paged:
+        raise ValueError(
+            "decode backend 'pallas_paged' consumes block tables; it "
+            "requires a PagedKVCache (serve with paged=PagedCacheConfig)")
     cache_len = cache.cache_len if paged else cache.k.shape[1]
     # cache_len == window_size for local layers (ring buffer), == max_len
     # for global layers (plain append, since pos < max_len).
     slot = pos % cache_len
     if paged:
-        # write the new row through the block table, then gather the
-        # logical view.  The page holding ``slot`` must be assigned
-        # (PageTable.prepare_step) — dead slots' tables point at DUMP.
+        # write the new row through the block table (a one-row scatter
+        # into the pool page holding ``slot`` — PageTable.prepare_step
+        # assigned it; dead slots' tables point at DUMP).
         jdx, off = slot // cache.page_size, slot % cache.page_size
         if per_slot:
             pid = cache.block[jnp.arange(b), jdx]
@@ -319,6 +335,22 @@ def attn_decode(params, cfg: ModelConfig, x, cache, pos, kind: str):
         kp = cache.kp.at[pid, off].set(k_new[:, 0])
         vp = cache.vp.at[pid, off].set(v_new[:, 0])
         new_cache = dataclasses.replace(cache, kp=kp, vp=vp)
+        if backend == "pallas_paged":
+            # the kernel walks the block table in place; no logical view
+            from repro.kernels.paged_attention.ops import paged_attention
+            kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+            g = cfg.n_heads // kvh
+            posb = pos if per_slot else jnp.full((b,), pos, jnp.int32)
+            out = paged_attention(
+                q[:, 0].reshape(b, kvh, g, hd), kp, vp, new_cache.block,
+                posb, cache_len=cache_len,
+                window=(cfg.window_size if kind == "local" else None),
+                softcap=cfg.attn_softcap)
+            out = out.reshape(b, 1, cfg.n_heads * hd)
+            new_len = jnp.minimum(jnp.max(pos) + 1, cache_len)
+            new_cache = dataclasses.replace(
+                new_cache, length=new_len.astype(jnp.int32))
+            return out @ params["wo"], new_cache
         k, v = paged_kv_view(new_cache)
     elif per_slot:
         rows = jnp.arange(b)

@@ -395,11 +395,11 @@ class TransformerLM:
         logits = self._unembed(params, last)[:, 0, :]
         return logits, cache
 
-    def _block_decode(self, kind, p, c, x, pos):
+    def _block_decode(self, kind, p, c, x, pos, backend: str = "gather"):
         cfg = self.cfg
         if kind in ("global", "local"):
             h, c = attn.attn_decode(p["attn"], cfg, rmsnorm(p["ln1"], x),
-                                    c, pos, kind)
+                                    c, pos, kind, backend=backend)
             x = x + h
             hh = rmsnorm(p["ln2"], x)
             if cfg.n_experts:
@@ -417,10 +417,16 @@ class TransformerLM:
                               cfg.mlp_activation)
         return x, c
 
-    def decode_step(self, params, cache, token, pos):
+    def decode_step(self, params, cache, token, pos,
+                    decode_backend: str = "gather"):
         """token: [b] int32 (or [b, d] embeds); pos: [] int32, or [b]
         int32 for per-slot positions (continuous batching: each batch
         slot decodes its own sequence offset).
+
+        ``decode_backend``: attention path for paged caches —
+        ``"gather"`` (materialize the logical view; bit-identical to a
+        contiguous cache) or ``"pallas_paged"`` (the block-table Pallas
+        kernel of :mod:`repro.kernels.paged_attention`; no gather).
 
         Returns (logits [b, vocab] f32, new_cache).
         """
@@ -434,7 +440,8 @@ class TransformerLM:
             gp, gc = inputs
             new_cs = []
             for i, kind in enumerate(cfg.attn_pattern):
-                x, nc = self._block_decode(kind, gp[i], gc[i], x, pos)
+                x, nc = self._block_decode(kind, gp[i], gc[i], x, pos,
+                                           backend=decode_backend)
                 new_cs.append(nc)
             return x, tuple(new_cs)
 
@@ -453,7 +460,8 @@ class TransformerLM:
         new_tail = []
         for i, kind in enumerate(cfg.pattern_tail):
             x, nc = self._block_decode(kind, params["tail"][i],
-                                       cache["tail"][i], x, pos)
+                                       cache["tail"][i], x, pos,
+                                       backend=decode_backend)
             new_tail.append(nc)
         new_cache = {"groups": new_gcache, "tail": tuple(new_tail)}
         return self._unembed(params, x)[:, 0, :], new_cache

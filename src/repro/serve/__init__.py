@@ -47,6 +47,14 @@ block-table paging, chosen as follows:
   the RTC savings number sees exactly the traffic the refresh model
   cares about.  The invariant "summed per-event bytes == profile x
   steps" is pinned in ``tests/test_paged_cache.py``.
+* **Decode backend** (PR 5) — ``ServeEngine(decode_backend=
+  "pallas_paged")`` swaps the gather path (materialize the contiguous
+  logical view each step) for the block-table Pallas kernel
+  (:mod:`repro.kernels.paged_attention` — design note in the
+  ``repro.kernels`` package docstring) that reads K/V pages in place.
+  Generations are identical either way; telemetry accounts the gather
+  path's phantom view traffic and the kernel path's true per-page
+  reads, which is where the RTC energy delta between the two shows up.
 """
 from repro.serve.engine import (PrefillBuckets, Request, ServeEngine,
                                 build_decode_step, build_prefill_step,

@@ -174,7 +174,7 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
 def build_decode_step(model: TransformerLM, mesh: Mesh,
                       policy: ShardingPolicy, batch: int, cache_len: int,
                       kv_seq_axis=None, per_slot_pos: bool = False,
-                      cache_factory=None):
+                      cache_factory=None, decode_backend: str = "gather"):
     """One-token decode with sharded KV cache. Returns
     (step_fn, param_shardings, cache_shardings).
 
@@ -185,6 +185,13 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
     ``cache_factory``: overrides the cache structure the step is lowered
     for (the paged engine passes ``PageTable.init_cache`` so the step
     consumes pool + block-table leaves instead of contiguous buffers).
+
+    ``decode_backend``: paged-cache attention path — ``"gather"``
+    materializes the logical view, ``"pallas_paged"`` runs the
+    block-table Pallas kernel in place.  The cache shardings are the
+    same either way (pool page dims keep ``ShardingPolicy.page_spec``):
+    the kernel is opaque to GSPMD, which gathers its operands around
+    the call while the cache itself stays sharded across steps.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     pspecs = param_specs(jax.eval_shape(
@@ -209,7 +216,8 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
         with axis_env(batch_axes=policy.data_axes if batch > 1 else None,
                       model_axis=policy.model_axis,
                       seq_axis=seq_override, mesh=mesh):
-            return model.decode_step(params, cache, token, pos)
+            return model.decode_step(params, cache, token, pos,
+                                     decode_backend=decode_backend)
 
     step = jax.jit(
         decode,
@@ -382,6 +390,18 @@ class ServeEngine:
     preempted, its pages offloaded to host, and resumed — bit-
     identically — once pages free up.  Paged and contiguous serving
     produce identical tokens for any in-budget workload.
+
+    ``decode_backend`` selects how paged attention resolves the block
+    tables: ``"gather"`` (default) materializes the contiguous logical
+    view every step — bit-identical to contiguous serving but a full
+    cache-length copy per layer per step; ``"pallas_paged"`` runs the
+    :mod:`repro.kernels.paged_attention` kernel, which reads K/V pages
+    through the block-table indirection in place (interpret mode on
+    CPU).  Generations are identical across backends on every arch
+    (logits agree to accumulation-order tolerance; pinned in
+    ``tests/test_paged_attention_kernel.py``), and telemetry accounts
+    only true per-page reads on the kernel path — no materialized-view
+    traffic.
     """
 
     def __init__(self, model: TransformerLM, params: dict,
@@ -389,23 +409,36 @@ class ServeEngine:
                  eos_id: Optional[int] = None, bos_id: Optional[int] = None,
                  mesh: Optional[Mesh] = None,
                  policy: Optional[ShardingPolicy] = None,
-                 buckets=None, paged=None):
+                 buckets=None, paged=None, decode_backend: str = "gather"):
         self.model = model
         self.params = params
         self.max_len = int(max_len)
         self.max_batch = int(max_batch)
         self.eos_id = eos_id
         self.bos_id = bos_id
+        if decode_backend not in ("gather", "pallas_paged"):
+            raise ValueError(
+                f"decode_backend must be 'gather' or 'pallas_paged', "
+                f"got {decode_backend!r}")
+        self.decode_backend = decode_backend
         if paged is True:
             paged = PagedCacheConfig()
         self.paged: Optional[PagedCacheConfig] = paged or None
+        if decode_backend == "pallas_paged" and self.paged is None:
+            raise ValueError(
+                "decode_backend='pallas_paged' consumes block tables: "
+                "construct the engine with paged=PagedCacheConfig(...)")
         if self.paged is not None:
             self.max_ctx = int(self.paged.max_ctx or self.max_len)
             if self.max_ctx < self.max_len:
                 raise ValueError(
-                    f"paged max_ctx {self.max_ctx} < max_len "
-                    f"{self.max_len}: the prefill cap cannot exceed the "
-                    f"logical context capacity")
+                    f"PagedCacheConfig.max_ctx={self.max_ctx} < engine "
+                    f"max_len {self.max_len}: the prefill cap cannot "
+                    f"exceed the logical context capacity")
+            # fail on a bad paged config NOW, before the (expensive)
+            # prefill/decode builders lower anything — the same checks
+            # PageTable applies, surfaced with the config field named.
+            self.paged.validate(model.cfg, self.max_ctx)
         else:
             self.max_ctx = self.max_len
         if buckets is None:
@@ -443,7 +476,8 @@ class ServeEngine:
             self._decode, _, self._cache_sh = build_decode_step(
                 model, mesh, policy, batch=self.max_batch,
                 cache_len=self.max_ctx, per_slot_pos=True,
-                cache_factory=self._table.init_cache)
+                cache_factory=self._table.init_cache,
+                decode_backend=self.decode_backend)
             self._table.bind_shardings(self._cache_sh)
             self._insert = None
         else:
@@ -590,6 +624,15 @@ class ServeEngine:
         """
         if max_new_tokens < 0:
             raise ValueError("max_new_tokens must be >= 0")
+        if telemetry is not None:
+            # tell the sink which decode path moves the KV bytes (the
+            # gather path's materialized logical view is real traffic
+            # the kernel path never generates); hasattr-guarded so
+            # plain-duck-typed sinks keep working.
+            conf = getattr(telemetry, "configure_decode", None)
+            if conf is not None:
+                conf(backend=self.decode_backend,
+                     paged=self._table is not None)
         eos = self.eos_id if eos_id is None else eos_id
         vocab = self.model.cfg.vocab_size
         temps = self._per_request(temperature, len(prompts), "temperature")

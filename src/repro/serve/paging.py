@@ -50,7 +50,22 @@ from repro.models.rglru import PagedRGLRUCache, RGLRUCache
 from repro.models.ssm import PagedSSMCache, SSMCache
 from repro.models.transformer import TransformerLM
 
-__all__ = ["PagedCacheConfig", "PageTable", "PagePayload", "logical_view"]
+__all__ = ["PagedCacheConfig", "PageTable", "PagePayload", "logical_view",
+           "slot_floor"]
+
+
+def slot_floor(cfg, max_ctx: int, page_size: int) -> int:
+    """Pages one fully decoded slot needs in its largest KV stream —
+    THE budget floor: ``resident_pages`` below this can deadlock with
+    every other slot already offloaded.  Single source of the rule for
+    both the eager :meth:`PagedCacheConfig.validate` and
+    :class:`PageTable`'s own defense."""
+    floor = 1
+    for kind in cfg.all_kinds:
+        if kind in ("global", "local"):
+            L = cfg.decode_cache_len(kind, max_ctx)
+            floor = max(floor, n_logical_pages(L, page_size))
+    return floor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,11 +84,55 @@ class PagedCacheConfig:
                           ``max_len``: decode keeps appending pages past
                           the prefill cap, which is how requests outgrow
                           the old contiguous per-slot allocation.
+
+    Field-local constraints are checked at construction; the
+    cross-field budget floor (``resident_pages`` must hold one fully
+    decoded slot, which needs the model's layer mix) is checked by
+    :meth:`validate`, which the engine calls before lowering anything —
+    a bad config fails eagerly with the offending field named instead
+    of deep inside :class:`PageTable`.
     """
 
     page_size: int = 16
     resident_pages: Optional[int] = None
     max_ctx: Optional[int] = None
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(
+                f"PagedCacheConfig.page_size must be > 0 (tokens per KV "
+                f"page), got {self.page_size}")
+        if self.resident_pages is not None and self.resident_pages < 1:
+            raise ValueError(
+                f"PagedCacheConfig.resident_pages must be >= 1 when set "
+                f"(device page budget per KV stream), got "
+                f"{self.resident_pages}")
+        if self.max_ctx is not None and self.max_ctx < 1:
+            raise ValueError(
+                f"PagedCacheConfig.max_ctx must be >= 1 when set "
+                f"(logical context capacity per slot), got {self.max_ctx}")
+
+    def slot_floor(self, cfg, max_ctx: int) -> int:
+        """Pages one fully decoded slot needs in its largest KV stream
+        (the guaranteed-progress floor for ``resident_pages``)."""
+        return slot_floor(cfg, max_ctx, self.page_size)
+
+    def validate(self, cfg, max_ctx: Optional[int] = None) -> None:
+        """Cross-field checks against a model config (and the engine's
+        resolved ``max_ctx``, defaulting to this config's own)."""
+        ctx = int(max_ctx if max_ctx is not None else (self.max_ctx or 0))
+        if ctx < 1:
+            raise ValueError(
+                "PagedCacheConfig.validate needs a positive max_ctx "
+                "(none set on the config and none passed)")
+        floor = self.slot_floor(cfg, ctx)
+        if self.resident_pages is not None and self.resident_pages < floor:
+            raise ValueError(
+                f"PagedCacheConfig.resident_pages={self.resident_pages} "
+                f"cannot hold one fully decoded slot: max_ctx={ctx} at "
+                f"page_size={self.page_size} needs {floor} pages in the "
+                f"largest KV stream; the engine could deadlock with every "
+                f"other slot already offloaded")
 
 
 class _Stream:
@@ -137,11 +196,7 @@ class PageTable:
         self._csh = cache_shardings
 
         self.streams: List[_Stream] = []
-        min_budget = 1
-        for where, kind in self._positions():
-            if kind in ("global", "local"):
-                L = self.cfg.decode_cache_len(kind, self.max_ctx)
-                min_budget = max(min_budget, n_logical_pages(L, page_size))
+        min_budget = slot_floor(self.cfg, self.max_ctx, self.page_size)
         if resident_pages is None:
             # ample default: every slot fully decoded stays resident
             resident_pages = min_budget * self.max_batch

@@ -25,6 +25,25 @@ Paged serving adds a third traffic class: page-out/page-in events
 reads/writes.  All byte accumulators are exact ints, so the invariant
 "summed per-event bytes == profile x decode steps" holds bit-for-bit
 (test-pinned in ``tests/test_paged_cache.py``).
+
+Decode-backend awareness (PR 5): how a paged step's KV bytes move
+depends on how attention resolves the block tables, and the engine
+reports its backend through :meth:`ServeTelemetry.configure_decode`:
+
+* ``gather`` — the jnp path *materializes* the contiguous logical view
+  each step: every block-table page is read and a full cache-length
+  copy is written per attention layer per live slot, **regardless of
+  context occupancy**, before attention even sweeps the view.  That
+  phantom traffic (:meth:`TrafficModel.gather_view_read_bytes` /
+  ``gather_view_write_bytes``) is exactly the avoidable copy the
+  paper's access-management argument targets, and it is accounted so
+  the RTC number sees it.
+* ``pallas_paged`` — the kernel reads pages in place: the KV sweep is
+  ``ceil(ctx/page_size)`` whole pages per layer
+  (:meth:`TrafficModel.kv_page_read_bytes`) and nothing else — no
+  materialized-view traffic, which is the point of the kernel.
+* ``contiguous`` (no paging) — row-exact sweep of the live context,
+  unchanged from the seed accounting.
 """
 from __future__ import annotations
 
@@ -118,6 +137,37 @@ class TrafficModel:
             total += rows * b
         return total
 
+    def kv_page_read_bytes(self, ctx: int) -> int:
+        """KV bytes one slot's *kernel* decode step reads: whole pages
+        covering the live context per layer (the block-table index map
+        DMAs page granules; the partial tail page still streams its
+        full ``page_size`` rows).  Row-exact when ``page_size == 0``."""
+        p = self.page_size
+        if not p:
+            return self.kv_read_bytes(ctx)
+        return sum((-(-min(ctx, c) // p) * p) * b
+                   for c, b in zip(self.kv_caps, self.kv_token_bytes))
+
+    @property
+    def gather_view_read_bytes(self) -> int:
+        """Pool bytes one slot's *gather* decode step reads to
+        materialize the logical view: every block-table page of every
+        attention layer — ``ceil(cache_len/page_size)`` full pages —
+        independent of how much context is actually live."""
+        p = self.page_size
+        if not p:
+            return sum(c * b for c, b in
+                       zip(self.kv_caps, self.kv_token_bytes))
+        return sum((-(-c // p) * p) * b
+                   for c, b in zip(self.kv_caps, self.kv_token_bytes))
+
+    @property
+    def gather_view_write_bytes(self) -> int:
+        """Bytes the materialized contiguous view costs to write per
+        slot per gather step (the gathered copy, sliced to the logical
+        cache length)."""
+        return sum(c * b for c, b in zip(self.kv_caps, self.kv_token_bytes))
+
 
 class ServeTelemetry:
     """Accumulates engine events and emits the RTC workload profile.
@@ -129,11 +179,28 @@ class ServeTelemetry:
     should describe a deployment context: ``ctx_scale = serve_ctx /
     engine.max_len`` maps the measured occupancy shape onto the target
     context without hand-building the traffic.
+
+    ``decode_mode`` — how decode-step KV bytes are converted:
+    ``"contiguous"`` (row-exact sweep of the live context),
+    ``"gather"`` (adds the paged gather path's materialized-view
+    traffic), or ``"pallas_paged"`` (whole-page reads only — the
+    kernel path never materializes a view).  ``None`` (default) lets
+    the engine set it via :meth:`configure_decode` at serve time;
+    passing an explicit mode pins it (the engine will not override).
     """
 
-    def __init__(self, traffic: TrafficModel, ctx_scale: float = 1.0):
+    _MODES = ("contiguous", "gather", "pallas_paged")
+
+    def __init__(self, traffic: TrafficModel, ctx_scale: float = 1.0,
+                 decode_mode: Optional[str] = None):
+        if decode_mode is not None and decode_mode not in self._MODES:
+            raise ValueError(
+                f"decode_mode must be one of {self._MODES}, "
+                f"got {decode_mode!r}")
         self.traffic = traffic
         self.ctx_scale = float(ctx_scale)
+        self._pinned_mode = decode_mode is not None
+        self.decode_mode = decode_mode or "contiguous"
         self.n_prefills = 0
         self.prefill_tokens = 0         # TRUE prompt tokens prefetched
         self.prefill_padded_tokens = 0  # positions incl. bucket padding
@@ -152,6 +219,17 @@ class ServeTelemetry:
         self.write_bytes_total = 0       # KV appends + recurrent state writes
         self.page_out_bytes_total = 0    # offloaded page bytes (DRAM reads)
         self.page_in_bytes_total = 0     # restored page bytes (DRAM writes)
+        self.gather_read_bytes_total = 0   # phantom view gathers (reads)
+        self.gather_write_bytes_total = 0  # phantom view copies (writes)
+
+    def configure_decode(self, backend: str, paged: bool) -> None:
+        """Engine hook: map its (decode_backend, paged?) pair onto the
+        accounting mode.  A mode passed to the constructor is pinned
+        and wins; otherwise contiguous engines are row-exact and paged
+        engines account their backend's real traffic."""
+        if self._pinned_mode:
+            return
+        self.decode_mode = backend if paged else "contiguous"
 
     # ------------------------------------------------------------- recording
     def record_prefill(self, plen: int, dt: float = 0.0,
@@ -181,7 +259,13 @@ class ServeTelemetry:
 
     def record_decode(self, ctx_lengths: Sequence[int], dt: float = 0.0) -> None:
         """One batched decode step over live slots with the given
-        per-slot context lengths (cached tokens attended)."""
+        per-slot context lengths (cached tokens attended).
+
+        KV bytes follow :attr:`decode_mode`: the kernel path reads
+        whole pages covering each live context and nothing more; the
+        gather path additionally pays the materialized logical view
+        (full block-table read + contiguous copy per layer per slot)
+        on top of its row-exact attention sweep."""
         t = self.traffic
         live = len(ctx_lengths)
         self.decode_steps += 1
@@ -189,9 +273,16 @@ class ServeTelemetry:
         self.tokens_generated += live
         self.max_live = max(self.max_live, live)
         self.param_read_bytes_total += t.param_read_bytes
-        self.kv_read_bytes_total += t.state_bytes * live \
-            + sum(t.kv_read_bytes(self._scaled(c)) for c in ctx_lengths)
+        if self.decode_mode == "pallas_paged":
+            kv = sum(t.kv_page_read_bytes(self._scaled(c))
+                     for c in ctx_lengths)
+        else:
+            kv = sum(t.kv_read_bytes(self._scaled(c)) for c in ctx_lengths)
+        self.kv_read_bytes_total += t.state_bytes * live + kv
         self.write_bytes_total += (t.kv_write_bytes + t.state_bytes) * live
+        if self.decode_mode == "gather":
+            self.gather_read_bytes_total += t.gather_view_read_bytes * live
+            self.gather_write_bytes_total += t.gather_view_write_bytes * live
 
     def _scaled(self, ctx: int) -> int:
         return int(round(ctx * self.ctx_scale))
@@ -233,11 +324,16 @@ class ServeTelemetry:
             raise ValueError("step period must be positive")
         footprint = self.traffic.param_bytes \
             + self.max_live * self.traffic.cache_slot_bytes
+        # gather-mode phantom traffic folds into the KV read/write
+        # streams (the view copy moves through the same DRAM rows the
+        # KV sweep walks); the split stays visible in the accumulators.
         return from_decode(
             name,
             param_read_bytes=self.param_read_bytes_total / n,
-            kv_read_bytes=self.kv_read_bytes_total / n,
-            kv_write_bytes=self.write_bytes_total / n,
+            kv_read_bytes=(self.kv_read_bytes_total
+                           + self.gather_read_bytes_total) / n,
+            kv_write_bytes=(self.write_bytes_total
+                            + self.gather_write_bytes_total) / n,
             page_out_bytes=self.page_out_bytes_total / n,
             page_in_bytes=self.page_in_bytes_total / n,
             footprint_bytes=footprint,

@@ -41,6 +41,39 @@ def test_flash_attention_matches_oracle(b, sq, h, kvh, hd, window, softcap,
         atol=tol, rtol=tol)
 
 
+# Edge cases (PR 5): sequences that do NOT tile the block grid (the
+# kernel pads to the grid and slices back, masking padded keys via
+# kv_len) and sliding windows smaller than one tile (the band lives
+# entirely inside single blocks; the block-level early exit must not
+# skip them).
+ATTN_EDGE_CASES = [
+    # b, sq, h, kvh, hd, q_blk, kv_blk, window, softcap
+    (1, 160, 4, 2, 32, 64, 64, None, None),    # sq % q_block != 0
+    (2, 200, 4, 4, 16, 128, 128, 16, 30.0),    # pad + window < one tile
+    (1, 100, 2, 1, 16, 64, 64, 1, None),       # window=1: self-only band
+    (1, 130, 4, 2, 16, 64, 512, None, 50.0),   # kv_block > seq, pad q
+    (2, 96, 4, 2, 16, 64, 32, 24, None),       # window < kv tile, pad q
+    (1, 33, 2, 2, 8, 32, 32, 40, None),        # window > seq (no-op band)
+]
+
+
+@pytest.mark.parametrize(
+    "b,sq,h,kvh,hd,qb,kb,window,softcap", ATTN_EDGE_CASES)
+def test_flash_attention_edge_tiling(b, sq, h, kvh, hd, qb, kb, window,
+                                     softcap, rng):
+    from repro.kernels.flash_attention.kernel import flash_attention
+    q = jnp.asarray(rng.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, kvh, hd)), jnp.float32)
+    ref = attention(q, k, v, causal=True, window=window, softcap=softcap,
+                    backend="ref")
+    pal = flash_attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, q_block=qb, kv_block=kb)
+    assert pal.shape == ref.shape      # padding sliced back off
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_flash_attention_vs_model_blocked_path(rng):
     """The model's blocked-jnp attention and the Pallas kernel agree."""
     from repro.models.attention import attn_apply, attn_init

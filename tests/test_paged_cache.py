@@ -271,7 +271,10 @@ def test_telemetry_page_bytes_and_exact_invariant():
     resident-page budget forces offload, they flow into the
     WorkloadProfile, and the profile equals the per-event byte sums
     EXACTLY — decode traffic from decode events only (prefill pad waste
-    is never double-counted into DRAM bytes)."""
+    is never double-counted into DRAM bytes).  The engine's gather
+    backend additionally pays the materialized logical view per live
+    slot per step (the phantom traffic the pallas_paged kernel
+    removes), which the reconstruction must reproduce too."""
     cfg = get_config("qwen1.5-0.5b", smoke=True)
     model = TransformerLM(cfg)
     params = model.init(jax.random.key(0))
@@ -285,6 +288,7 @@ def test_telemetry_page_bytes_and_exact_invariant():
     prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
                for n in (5, 9, 3)]
     engine.serve(prompts, 30, telemetry=tele)
+    assert tele.decode_mode == "gather"   # engine-configured
 
     # the tight budget forced offload traffic, and it reached the profile
     assert tele.page_outs > 0 and tele.page_ins > 0
@@ -292,6 +296,7 @@ def test_telemetry_page_bytes_and_exact_invariant():
 
     # independent per-event reconstruction
     param_total = kv_total = write_total = po_total = pi_total = 0
+    gr_total = gw_total = 0
     n_steps = 0
     for ev in tele.events:
         if ev[0] == "decode":
@@ -301,6 +306,8 @@ def test_telemetry_page_bytes_and_exact_invariant():
             kv_total += t.state_bytes * len(ctx) \
                 + sum(t.kv_read_bytes(c) for c in ctx)
             write_total += (t.kv_write_bytes + t.state_bytes) * len(ctx)
+            gr_total += t.gather_view_read_bytes * len(ctx)
+            gw_total += t.gather_view_write_bytes * len(ctx)
         elif ev[0] == "page_out":
             po_total += t.page_bytes(ev[1])
         elif ev[0] == "page_in":
@@ -308,12 +315,15 @@ def test_telemetry_page_bytes_and_exact_invariant():
     assert n_steps == tele.decode_steps
     assert po_total == tele.page_out_bytes_total
     assert pi_total == tele.page_in_bytes_total
+    assert gr_total == tele.gather_read_bytes_total
+    assert gw_total == tele.gather_write_bytes_total
 
     w = tele.workload_profile(step_period_s=0.01)
     n = tele.decode_steps
     assert w.read_bytes_per_iter == \
-        param_total / n + kv_total / n + po_total / n
-    assert w.write_bytes_per_iter == write_total / n + pi_total / n
+        param_total / n + kv_total / n + gr_total / n + po_total / n
+    assert w.write_bytes_per_iter == \
+        write_total / n + gw_total / n + pi_total / n
 
     # page moves are whole pages: ctx 5 rounds up to one 8-token page
     # per global layer (+ state); never less than the row-exact bytes
@@ -323,8 +333,11 @@ def test_telemetry_page_bytes_and_exact_invariant():
 
 
 def test_paged_telemetry_zero_without_pressure():
-    """An ample budget never offloads: page counters stay zero and the
-    profile reduces to the contiguous engine's traffic."""
+    """An ample budget never offloads: page counters stay zero.  The
+    gather backend still pays its materialized-view traffic every step
+    (pressure-independent — that's why the kernel backend exists), and
+    pinning ``decode_mode="contiguous"`` recovers the row-exact
+    profile."""
     cfg = get_config("qwen1.5-0.5b", smoke=True)
     model = TransformerLM(cfg)
     params = model.init(jax.random.key(0))
@@ -332,15 +345,31 @@ def test_paged_telemetry_zero_without_pressure():
                          paged=PagedCacheConfig(page_size=8))
     t = TrafficModel.from_config(get_config("qwen1.5-0.5b"), max_len=4096)
     tele = ServeTelemetry(t)
+    pinned = ServeTelemetry(t, decode_mode="contiguous")
     rng = np.random.default_rng(1)
-    engine.serve([rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)],
-                 6, telemetry=tele)
-    assert tele.page_outs == tele.page_ins == 0
-    assert tele.page_out_bytes_total == tele.page_in_bytes_total == 0
+    prompt = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    engine.serve([prompt], 6, telemetry=tele)
+    engine.serve([prompt], 6, telemetry=pinned)
+    for s in (tele, pinned):
+        assert s.page_outs == s.page_ins == 0
+        assert s.page_out_bytes_total == s.page_in_bytes_total == 0
+    # engine-configured gather accounting: one view read+write per live
+    # slot per step on top of the row-exact sweep
+    assert tele.decode_mode == "gather"
+    n = tele.decode_steps
+    assert tele.gather_read_bytes_total == n * t.gather_view_read_bytes
+    assert tele.gather_write_bytes_total == n * t.gather_view_write_bytes
     w = tele.workload_profile(step_period_s=0.01)
     assert w.read_bytes_per_iter == \
-        tele.param_read_bytes_total / tele.decode_steps \
-        + tele.kv_read_bytes_total / tele.decode_steps
+        (tele.param_read_bytes_total + tele.kv_read_bytes_total
+         + tele.gather_read_bytes_total) / n
+    # the pinned sink keeps the seed (row-exact) accounting
+    assert pinned.decode_mode == "contiguous"
+    assert pinned.gather_read_bytes_total == 0
+    wp = pinned.workload_profile(step_period_s=0.01)
+    assert wp.read_bytes_per_iter == \
+        (pinned.param_read_bytes_total + pinned.kv_read_bytes_total) \
+        / pinned.decode_steps
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +387,35 @@ def test_page_table_budget_floor():
     with pytest.raises(ValueError, match="max_ctx"):
         ServeEngine(model, params, max_len=32, max_batch=1,
                     paged=PagedCacheConfig(page_size=8, max_ctx=16))
+
+
+def test_paged_config_validates_eagerly():
+    """A bad PagedCacheConfig fails at construction / engine entry with
+    the offending field named — never deep inside PageTable after the
+    prefill executables already lowered."""
+    with pytest.raises(ValueError, match="PagedCacheConfig.page_size"):
+        PagedCacheConfig(page_size=0)
+    with pytest.raises(ValueError, match="PagedCacheConfig.resident_pages"):
+        PagedCacheConfig(resident_pages=0)
+    with pytest.raises(ValueError, match="PagedCacheConfig.max_ctx"):
+        PagedCacheConfig(max_ctx=-4)
+
+    model, params, *_ = _arch("qwen1.5-0.5b")
+    cfg = model.cfg
+    bad = PagedCacheConfig(page_size=8, resident_pages=2, max_ctx=MAX_CTX)
+    # the floor needs the model's layer mix: validate() names the field
+    with pytest.raises(ValueError, match="PagedCacheConfig.resident_pages"):
+        bad.validate(cfg)
+    assert bad.slot_floor(cfg, MAX_CTX) == 3     # ceil(24/8)
+    # the engine applies the same check before lowering anything: abuse
+    # abstract params — if validation were lazy, tracing would fail
+    # first with an unrelated error
+    shapes = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    with pytest.raises(ValueError, match="PagedCacheConfig.resident_pages"):
+        ServeEngine(model, shapes, max_len=16, max_batch=2, paged=bad)
+    # a config with no max_ctx anywhere cannot be validated
+    with pytest.raises(ValueError, match="max_ctx"):
+        PagedCacheConfig(page_size=8).validate(cfg)
 
 
 def test_allocate_on_write_and_free_on_retire():

@@ -69,6 +69,22 @@ out_paged = paged.serve(prompts, 12, temperature=temps, top_k=topks, seed=7)
 out_ref = solo.serve(prompts, 12, temperature=temps, top_k=topks, seed=7)
 for i, (a, b) in enumerate(zip(out_paged, out_ref)):
     np.testing.assert_array_equal(a, b, err_msg=f"paged request {i}")
+
+# block-table Pallas decode kernel on the same mesh: the pool page dim
+# stays sharded in the decode step's cache signature while the kernel's
+# scalar-prefetch index map consumes the (replicated) block tables —
+# GSPMD gathers the kernel's operands around the opaque call, and the
+# mesh engine must reproduce the solo kernel engine bit-for-bit
+kernel_kw = dict(max_len=32, max_batch=2,
+                 paged=PagedCacheConfig(page_size=8),
+                 decode_backend="pallas_paged")
+kernel_mesh = ServeEngine(model, params, mesh=mesh, policy=policy,
+                          **kernel_kw)
+kernel_solo = ServeEngine(model, params, **kernel_kw)
+out_km = kernel_mesh.serve(prompts, 12, temperature=temps, top_k=topks, seed=7)
+out_ks = kernel_solo.serve(prompts, 12, temperature=temps, top_k=topks, seed=7)
+for i, (a, b) in enumerate(zip(out_km, out_ks)):
+    np.testing.assert_array_equal(a, b, err_msg=f"kernel request {i}")
 print("MULTIDEVICE_SERVE_OK", flush=True)
 """
 
