@@ -16,13 +16,20 @@ Absolute CPU timings are hardware noise; the schema keeps them anyway
 Generations are asserted identical across backends on every swept arch
 — the bench doubles as a parity smoke.
 
+Each row also carries the *static* per-step byte count: the jaxpr-level
+audit (:mod:`repro.analysis`) of the very decode executable the sweep
+timed, at full occupancy, next to the telemetry split — so the
+trajectory captures auditor/telemetry agreement (``static_match``)
+per arch and backend, not just throughput.
+
 Schema (``BENCH_serve.json``)::
 
-    {"schema": "serve-decode-v1",
+    {"schema": "serve-decode-v2",
      "rows": [{"arch", "batch", "backend", "decode_steps",
                "steps_per_sec", "tok_per_sec",
                "kv_read_bytes_per_step", "gather_bytes_per_step",
-               "page_size"}, ...]}
+               "static_bytes_per_step", "static_classes",
+               "static_match", "page_size"}, ...]}
 
     python benchmarks/serve_sweep.py [--archs all] [--out BENCH_serve.json]
 """
@@ -39,6 +46,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro.analysis import decode_traffic_report, unit_from_engine
 from repro.configs import ARCH_IDS, get_config
 from repro.models.transformer import TransformerLM
 from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
@@ -78,6 +86,10 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
         outs[backend] = engine.serve(prompts, new_tokens, seed=7,
                                      telemetry=tele)
         n = max(tele.decode_steps, 1)
+        # static audit of the exact decode executable this sweep timed
+        # (smoke scale, full occupancy) — the agreement bit is the
+        # trajectory signal that accounting has not drifted
+        audit = decode_traffic_report(unit_from_engine(engine, arch))
         rows.append({
             "arch": arch,
             "batch": max_batch,
@@ -89,6 +101,11 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
             "kv_read_bytes_per_step": tele.kv_read_bytes_total // n,
             "gather_bytes_per_step": (tele.gather_read_bytes_total
                                       + tele.gather_write_bytes_total) // n,
+            "static_bytes_per_step": sum(
+                audit["derived"].get(k, 0) for k in audit["expected"]),
+            "static_classes": {k: audit["derived"].get(k, 0)
+                               for k in sorted(audit["expected"])},
+            "static_match": bool(audit["match"]),
             "page_size": page_size,
         })
     for i, (a, b) in enumerate(zip(outs["gather"], outs["pallas_paged"])):
@@ -120,10 +137,15 @@ def main():
         emit(f"serve_decode_{r['arch']}_{r['backend']}", us,
              f"steps/s={r['steps_per_sec']:.2f} "
              f"kv_read/step={r['kv_read_bytes_per_step']} "
-             f"gather/step={r['gather_bytes_per_step']}")
+             f"gather/step={r['gather_bytes_per_step']} "
+             f"static/step={r['static_bytes_per_step']} "
+             f"audit={'ok' if r['static_match'] else 'DRIFT'}")
+    if not all(r["static_match"] for r in rows):
+        raise SystemExit("static audit disagrees with telemetry — "
+                         "run python -m repro.analysis for the class diff")
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
-        json.dump({"schema": "serve-decode-v1", "rows": rows}, f, indent=1)
+        json.dump({"schema": "serve-decode-v2", "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)")
 
 

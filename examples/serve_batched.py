@@ -52,6 +52,10 @@ def main():
                     help="paged attention path: materialize the logical "
                          "view (gather) or read pages in place through "
                          "the block-table Pallas kernel (pallas_paged)")
+    ap.add_argument("--audit", action="store_true",
+                    help="statically audit the engine's lowered decode "
+                         "step (repro.analysis) and print the per-class "
+                         "byte cross-check against telemetry's model")
     args = ap.parse_args()
     if args.decode_backend == "pallas_paged" and not args.paged:
         ap.error("--decode-backend pallas_paged requires --paged")
@@ -110,6 +114,22 @@ def main():
                   f"{tele.kv_read_bytes_total:,}-byte KV + state sweep "
                   f"(the copy the pallas_paged kernel never makes)")
     print(f"sample continuation: {outs[0][:10].tolist()}")
+
+    if args.audit:
+        # static cross-check: walk the decode executable we just served
+        # through and compare its jaxpr-derived per-class bytes (full
+        # occupancy, smoke scale) against TrafficModel's analytic twin
+        from repro.analysis import decode_traffic_report, unit_from_engine
+        rep = decode_traffic_report(unit_from_engine(engine, args.arch))
+        print("\nstatic audit of the lowered decode step "
+              "(bytes/step, full occupancy, smoke scale):")
+        print(f"  {'class':<20s} {'jaxpr-derived':>14s} {'telemetry':>14s}")
+        for k in sorted(rep["expected"]):
+            d, e = rep["derived"].get(k, 0), rep["expected"][k]
+            mark = "" if d == e else "   <-- DRIFT"
+            print(f"  {k:<20s} {d:>14,d} {e:>14,d}{mark}")
+        print("  agreement: " + ("exact" if rep["match"] else
+                                 "DRIFT (run python -m repro.analysis)"))
 
     # RTC on THIS loop (weights in LPDDR-class memory, edge serving):
     w = tele.workload_profile(name=f"{full.name}/serve")

@@ -1,0 +1,81 @@
+"""Static analysis of the serving stack's lowered computations.
+
+The paper's RTC argument needs byte-accurate knowledge of DRAM traffic,
+but ``serve/telemetry.py``'s :class:`TrafficModel` is hand-derived
+arithmetic.  This package closes that gap *statically*: it walks the
+ClosedJaxprs of the engine's lowered prefill/decode executables — no
+execution, abstract params suffice — and machine-checks what XLA will
+actually move against what the analytic model claims.
+
+Design
+======
+
+**Audit units and artifacts** (:mod:`.artifacts`).  One
+:class:`~repro.analysis.artifacts.AuditUnit` per engine configuration
+(arch x decode backend x topology) captures each lowered executable
+(decode step, top prefill bucket, contiguous slot-insert) as an
+:class:`~repro.analysis.artifacts.Artifact`: the traced ClosedJaxpr,
+per-invar taint seeds derived from the argument pytree paths, donation
+flags from ``jitted.lower(...).args_info``, and argument
+PartitionSpecs.  Everything is obtained from abstract arguments, so the
+CLI audits engines built with ``jax.eval_shape``'d params.
+
+**Pass registry** (:mod:`.registry`).  A pass is ``fn(unit) ->
+[Finding]`` registered under a stable name; ``run_passes`` runs all of
+them over all units.  Findings carry a deterministic key
+(``pass:code:subject``) — the unit of baseline accounting.
+
+**Traffic auditor** (:mod:`.jaxpr_walk`, :mod:`.traffic`).  A taint
+walker bills memory-moving equations exactly: structural ops are free
+views, compute reads of HBM-resident operands (cache leaves, params,
+the gather backend's materialized view) bill their aval bytes per use,
+pool gathers bill the view's read *and* write, scatters on resident
+buffers bill exactly their update bytes and keep the in-place chain,
+scans multiply their body by the trip count, and cache outvars that did
+not stay in-place bill as fresh full writes.  The derived per-class
+bytes must equal ``TrafficModel.static_decode_classes`` at full
+occupancy, class for class — ``traffic-drift`` findings are never
+baselined, so accounting drift between telemetry and the lowered
+computation fails CI statically.
+
+**Cost-handler protocol** (:mod:`.costs`).  ``pallas_call`` is opaque
+to the walker, so each kernel's ``repro.kernels.*.ops`` module
+registers ``handler(eqn) -> KernelCost`` (per-operand HBM bytes derived
+from operand avals and the equation's grid), keyed by a source-path
+fragment of the kernel body.  The walker classifies handler bytes by
+operand taint; a pallas call with no handler is itself an error
+finding, which is what keeps cost handlers from drifting from their
+kernels (the kernels CI job runs ``--check-baseline``).
+
+**Lints** (:mod:`.lints`).  Sharding: detects GSPMD all-gathers forced
+around the opaque paged-attention kernel on a mesh (the known ROADMAP
+item 3 gap — baselined) and pool page dims that lost their sharding.
+Hygiene: f64/weak-type promotion, closure-captured constants > 1 MiB,
+host-sync callbacks, and cache arguments whose lowered executables do
+not donate them (an un-donated cache is a full copy per step that the
+byte accounting would silently miss).
+
+**Baseline policy** (:mod:`.registry`, ``baseline.json``).  Error
+findings diff against the checked-in allowlist: a finding not in the
+baseline fails (regression), and a baseline entry no longer produced
+also fails (the fix must shrink the baseline in the same change).
+``info`` findings never gate.  ``python -m repro.analysis
+--write-baseline`` regenerates the file; ``--check-baseline`` is the CI
+gate.
+
+Run ``python -m repro.analysis`` for the default audit matrix (4 archs
+x both paged decode backends, plus a forced-2-device mesh audit of the
+kernel backend).
+"""
+from repro.analysis.artifacts import Artifact, AuditUnit, unit_from_engine
+from repro.analysis.costs import KernelCost, register_pallas_cost
+from repro.analysis.jaxpr_walk import Taint, walk_jaxpr
+from repro.analysis.registry import (Finding, diff_baseline, load_baseline,
+                                     register_pass, run_passes)
+from repro.analysis.traffic import decode_traffic_report
+import repro.analysis.lints    # noqa: F401  (registers sharding/hygiene)
+
+__all__ = ["Artifact", "AuditUnit", "unit_from_engine", "KernelCost",
+           "register_pallas_cost", "Taint", "walk_jaxpr", "Finding",
+           "diff_baseline", "load_baseline", "register_pass", "run_passes",
+           "decode_traffic_report"]

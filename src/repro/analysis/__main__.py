@@ -1,0 +1,167 @@
+"""CLI: audit the serving stack's lowered computations.
+
+``python -m repro.analysis`` builds the default audit matrix — smoke
+configs of the default archs x both paged decode backends on one
+device, plus a 2-device mesh audit of the Pallas kernel backend (the
+process forces two host CPU devices *before* jax initializes, so one
+run covers both topologies) — runs every registered pass, and diffs the
+error findings against the checked-in ``baseline.json``.
+
+Exit status 0 iff no new findings and no stale baseline entries.
+
+* ``--check-baseline`` is the CI gate (same as the default, spelled
+  explicitly so workflows read as intended).
+* ``--write-baseline`` regenerates ``baseline.json`` from the current
+  findings (use when intentionally accepting or fixing a finding).
+* ``--json PATH`` dumps the full findings + per-unit traffic report.
+"""
+from __future__ import annotations
+
+import os
+
+# Force a 2-device CPU topology before jax initializes any backend:
+# the mesh audit needs >1 device, and analysis never executes anything
+# so CPU is always the right platform.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_ARCHS = ("qwen1.5-0.5b", "gemma2-9b", "recurrentgemma-2b",
+                 "falcon-mamba-7b")
+DEFAULT_BASELINE = pathlib.Path(__file__).parent / "baseline.json"
+
+
+def build_units(archs, backends, multidevice=True, max_len=32, max_batch=2,
+                page_size=8):
+    """Audit units for the given matrix (smoke configs, abstract params)."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.analysis.artifacts import unit_from_engine
+    from repro.configs import get_config
+    from repro.dist.sharding import ShardingPolicy
+    from repro.models.transformer import TransformerLM
+    from repro.serve import PagedCacheConfig, ServeEngine
+
+    units = []
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        model = TransformerLM(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.key(0)))
+        for backend in backends:
+            eng = ServeEngine(model, params, max_len=max_len,
+                              max_batch=max_batch,
+                              paged=PagedCacheConfig(page_size=page_size),
+                              decode_backend=backend)
+            units.append(unit_from_engine(eng, arch))
+        # the contiguous cache path (no paging) is a distinct decode
+        # computation with its own insert executable — audit it too
+        eng = ServeEngine(model, params, max_len=max_len,
+                          max_batch=max_batch)
+        units.append(unit_from_engine(eng, arch))
+    if multidevice:
+        if len(jax.devices()) < 2:
+            raise RuntimeError(
+                "multi-device audit needs 2 devices; run via "
+                "python -m repro.analysis (it forces 2 CPU devices) or "
+                "pass --no-multidevice")
+        mesh = Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                    ("data", "model"))
+        policy = ShardingPolicy.for_mesh(mesh)
+        cfg = get_config(archs[0], smoke=True)
+        model = TransformerLM(cfg)
+        params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        eng = ServeEngine(model, params, max_len=max_len,
+                          max_batch=max_batch, mesh=mesh, policy=policy,
+                          paged=PagedCacheConfig(page_size=page_size),
+                          decode_backend="pallas_paged")
+        units.append(unit_from_engine(eng, archs[0]))
+    return units
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static traffic audit + lint gate for the serving stack")
+    ap.add_argument("--archs", nargs="+", default=list(DEFAULT_ARCHS))
+    ap.add_argument("--backends", nargs="+",
+                    default=["gather", "pallas_paged"],
+                    choices=["gather", "pallas_paged"])
+    ap.add_argument("--no-multidevice", dest="multidevice",
+                    action="store_false",
+                    help="skip the 2-device mesh audit")
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    default=DEFAULT_BASELINE)
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="gate on the baseline diff (the default behavior, "
+                         "spelled out for CI)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from current findings")
+    ap.add_argument("--json", type=pathlib.Path, default=None,
+                    help="write findings + traffic reports to this path")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.registry import (baseline_payload, diff_baseline,
+                                         load_baseline, run_passes)
+    from repro.analysis.traffic import decode_traffic_report
+
+    units = build_units(args.archs, args.backends,
+                        multidevice=args.multidevice)
+    findings = run_passes(units)
+
+    reports = {}
+    for unit in units:
+        if unit.artifact("decode") is None:
+            continue
+        rep = decode_traffic_report(unit)
+        reports[unit.label] = rep
+        status = "OK " if rep["match"] else "FAIL"
+        print(f"[traffic] {status} {unit.label}: "
+              f"{sum(rep['derived'].get(k, 0) for k in rep['expected'])} "
+              f"bytes/step across {len(rep['expected'])} gated classes")
+    for f in findings:
+        print(f"[{f.severity}] {f.key}\n    {f.detail}"
+              + (f"\n    at {f.provenance}" if f.provenance else ""))
+    if not findings:
+        print("no findings")
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(
+            {"findings": [f.to_dict() for f in findings],
+             "traffic": reports}, indent=2, sort_keys=True))
+        print(f"wrote {args.json}")
+
+    if args.write_baseline:
+        notes = {}
+        if args.baseline.exists():
+            notes = load_baseline(args.baseline)
+        args.baseline.write_text(
+            json.dumps(baseline_payload(findings, notes), indent=2) + "\n")
+        print(f"wrote {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline.exists() else {}
+    new, fixed = diff_baseline(findings, baseline)
+    for f in new:
+        print(f"NEW finding (not in baseline): {f.key}")
+    for k in fixed:
+        print(f"STALE baseline entry (finding fixed — delete it): {k}")
+    if new or fixed:
+        print("analysis gate: FAIL")
+        return 1
+    print(f"analysis gate: OK ({len(baseline)} baselined finding(s), "
+          f"{len(units)} unit(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,173 @@
+"""Capture lowered serving artifacts into analyzable audit units.
+
+An :class:`AuditUnit` is one engine configuration (arch x decode
+backend x topology) with every lowered artifact the analyzer inspects:
+the decode step, the top prefill bucket, and (contiguous engines) the
+slot-insert executable.  Capture never executes anything — jaxprs come
+from ``jitted.trace(...)`` and donation flags from
+``jitted.lower(...).args_info``, both of which only need abstract
+arguments, so units can be built from engines constructed with
+``jax.eval_shape``'d params.
+
+Each artifact's flattened invars are labeled from the argument pytree
+paths (the same leaf names ``serve.engine.cache_specs`` switches on),
+which seeds the taint walker and gives findings human-stable subjects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.jaxpr_walk import CLASS_BY_LEAF, Taint, WalkResult, \
+    walk_jaxpr
+from repro.serve.telemetry import TrafficModel
+
+__all__ = ["Artifact", "AuditUnit", "unit_from_engine", "leaf_name"]
+
+
+def leaf_name(path) -> str:
+    """Last named pytree key on a flatten path (''. when unnamed)."""
+    for p in reversed(path):
+        name = str(getattr(p, "name", getattr(p, "key", "")))
+        if name:
+            return name
+    return ""
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+@dataclasses.dataclass
+class Artifact:
+    """One lowered executable, flattened for the passes."""
+
+    name: str                                   # 'decode'|'prefill'|'insert'
+    closed_jaxpr: object
+    seeds: Tuple[Optional[Taint], ...]          # per flat invar
+    invar_labels: Tuple[str, ...]               # per flat invar (path str)
+    arg_specs: Tuple[object, ...]               # per flat invar: PartitionSpec|None
+    donated: Tuple[bool, ...]                   # per flat invar (actual)
+    expect_donated: Tuple[bool, ...]            # per flat invar (semantic)
+    out_leaf_names: Tuple[str, ...]             # per flat outvar ('' if none)
+    consts: Tuple[object, ...] = ()
+    _walk: Optional[WalkResult] = None
+
+    def walk(self) -> WalkResult:
+        """Taint walk of the jaxpr (cached — traffic and sharding
+        passes share one walk)."""
+        if self._walk is None:
+            self._walk = walk_jaxpr(self.closed_jaxpr, self.seeds)
+        return self._walk
+
+
+@dataclasses.dataclass
+class AuditUnit:
+    """One audited engine configuration."""
+
+    label: str                   # '<arch>/<mode>/<topology>'
+    cfg_name: str
+    mode: str                    # 'contiguous' | 'gather' | 'pallas_paged'
+    traffic: TrafficModel
+    live: int                    # decode batch the step is lowered for
+    ctx: int                     # logical context capacity (full occupancy)
+    axis_sizes: Dict[str, int]
+    data_axes: Tuple[str, ...]
+    artifacts: List[Artifact]
+    reports: Dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    def artifact(self, name: str) -> Optional[Artifact]:
+        for a in self.artifacts:
+            if a.name == name:
+                return a
+        return None
+
+
+def _seed_for(role: str, path, flat_index: int) -> Optional[Taint]:
+    if role == "params":
+        return Taint("param", resident=True, inplace=True, src=flat_index)
+    if role == "cache":
+        cls = CLASS_BY_LEAF.get(leaf_name(path))
+        if cls is not None:
+            return Taint(cls, resident=True, inplace=True, src=flat_index)
+    return None
+
+
+def _capture(entry: dict) -> Artifact:
+    fn, args = entry["fn"], entry["args"]
+    roles: Dict[int, str] = entry.get("roles", {})
+    donate_expect = set(entry.get("expect_donate_argnums", ()))
+    shardings = entry.get("shardings")
+
+    closed = fn.trace(*args).jaxpr
+    lowered = fn.lower(*args)
+    donated = tuple(bool(info.donated)
+                    for info in jax.tree_util.tree_leaves(lowered.args_info))
+
+    seeds: List[Optional[Taint]] = []
+    labels: List[str] = []
+    specs: List[object] = []
+    expect: List[bool] = []
+    flat_index = 0
+    for argnum, arg in enumerate(args):
+        role = roles.get(argnum, "other")
+        leaves = jax.tree_util.tree_flatten_with_path(arg)[0]
+        sh = None if shardings is None else shardings[argnum]
+        sh_leaves = (jax.tree_util.tree_leaves(sh)
+                     if sh is not None else [None] * len(leaves))
+        if len(sh_leaves) != len(leaves):
+            raise ValueError(
+                f"artifact {entry['name']}: arg {argnum} sharding tree has "
+                f"{len(sh_leaves)} leaves for {len(leaves)} arg leaves")
+        for (path, _), s in zip(leaves, sh_leaves):
+            seeds.append(_seed_for(role, path, flat_index))
+            labels.append(f"arg{argnum}{_path_str(path)}")
+            specs.append(getattr(s, "spec", s))
+            expect.append(argnum in donate_expect)
+            flat_index += 1
+    if len(seeds) != len(closed.jaxpr.invars):
+        raise ValueError(
+            f"artifact {entry['name']}: {len(seeds)} arg leaves vs "
+            f"{len(closed.jaxpr.invars)} jaxpr invars — argument flattening "
+            f"no longer matches the trace")
+
+    out_shapes = jax.eval_shape(fn, *args)
+    out_names = tuple(leaf_name(p) for p, _ in
+                      jax.tree_util.tree_flatten_with_path(out_shapes)[0])
+    return Artifact(
+        name=entry["name"], closed_jaxpr=closed,
+        seeds=tuple(seeds), invar_labels=tuple(labels),
+        arg_specs=tuple(specs), donated=donated,
+        expect_donated=tuple(expect), out_leaf_names=out_names,
+        consts=tuple(closed.consts))
+
+
+def unit_from_engine(engine, cfg_name: str,
+                     topology: Optional[str] = None) -> AuditUnit:
+    """Build the audit unit for a ``ServeEngine``.
+
+    ``topology`` defaults to ``'solo'`` for a single-device mesh and
+    ``'mesh<N>'`` otherwise — it is part of every finding subject, so a
+    multi-device finding can be baselined without shadowing the solo
+    configuration.
+    """
+    mesh = engine.mesh
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_dev = 1
+    for s in axis_sizes.values():
+        n_dev *= s
+    if topology is None:
+        topology = "solo" if n_dev == 1 else f"mesh{n_dev}"
+    mode = "contiguous" if engine.paged is None else engine.decode_backend
+    page = engine.paged.page_size if engine.paged is not None else 0
+    traffic = TrafficModel.from_config(engine.model.cfg, engine.max_ctx,
+                                       page_size=page)
+    artifacts = [_capture(e) for e in engine.lowered_artifacts()]
+    return AuditUnit(
+        label=f"{cfg_name}/{mode}/{topology}", cfg_name=cfg_name, mode=mode,
+        traffic=traffic, live=engine.max_batch, ctx=engine.max_ctx,
+        axis_sizes=axis_sizes,
+        data_axes=tuple(engine.policy.data_axes or ()),
+        artifacts=artifacts)

@@ -1,0 +1,76 @@
+"""Per-kernel HBM cost handlers for ``pallas_call`` equations.
+
+A Pallas call is opaque to the jaxpr walker: its grid spec decides what
+actually crosses HBM (scalar-prefetch operands are fetched once, block
+operands are re-DMA'd every time their index map changes), so each
+kernel registers a *cost handler* that derives the per-operand byte
+movement from the equation's operand avals.
+
+Protocol: ``handler(eqn) -> KernelCost`` where ``reads[i]`` is the HBM
+bytes the kernel streams from operand ``i`` over the whole grid and
+``writes[j]`` the bytes written to output ``j``.  The traffic pass then
+*classifies* those bytes by the taint of each operand (a pool operand's
+reads become ``kv_page_read``; an untainted activation operand is a
+small on-chip intermediate and is not DRAM traffic) — the handler only
+knows geometry, never what the buffers mean.
+
+Handlers are keyed by a source-path fragment matched against the
+equation's ``name_and_src_info`` (every kernel body here is a module-
+private ``_kernel``, so the *file* is the stable identity).  This
+module is import-leaf on purpose: each ``repro.kernels.*.ops`` imports
+it to register at import time, and the traffic pass imports those ops
+modules to trigger registration — a kernel whose ops module forgets to
+register shows up as a ``missing-cost-handler`` finding, which is what
+ties cost handlers to their kernels in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["KernelCost", "register_pallas_cost", "lookup_pallas_cost",
+           "registered_pallas_costs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """HBM bytes one ``pallas_call`` moves, per operand / per output."""
+
+    reads: Tuple[int, ...]    # aligned with eqn.invars
+    writes: Tuple[int, ...]   # aligned with eqn.outvars
+
+
+_HANDLERS: Dict[str, Callable] = {}
+
+
+def register_pallas_cost(path_fragment: str, handler: Callable) -> None:
+    """Register ``handler`` for pallas calls whose ``name_and_src_info``
+    contains ``path_fragment`` (e.g. ``"kernels/paged_attention/"``)."""
+    prev = _HANDLERS.get(path_fragment)
+    if prev is not None and prev is not handler:
+        raise ValueError(
+            f"pallas cost handler for {path_fragment!r} already registered")
+    _HANDLERS[path_fragment] = handler
+
+
+def lookup_pallas_cost(name_and_src: str) -> Optional[Callable]:
+    for frag, handler in _HANDLERS.items():
+        if frag in name_and_src:
+            return handler
+    return None
+
+
+def registered_pallas_costs() -> Tuple[str, ...]:
+    return tuple(sorted(_HANDLERS))
+
+
+def _nbytes(v) -> int:
+    return int(v.aval.size) * int(v.aval.dtype.itemsize)
+
+
+def uniform_cost(eqn) -> KernelCost:
+    """Every operand streamed once, every output written once — correct
+    for kernels whose block index maps visit each element exactly once
+    (single-sweep grids with no inner re-walk)."""
+    return KernelCost(reads=tuple(_nbytes(v) for v in eqn.invars),
+                      writes=tuple(_nbytes(v) for v in eqn.outvars))

@@ -1,0 +1,127 @@
+"""Pass registry, findings, and the baseline allowlist policy.
+
+A *pass* is a function ``(unit: AuditUnit) -> list[Finding]`` registered
+under a stable name with :func:`register_pass`; :func:`run_passes` runs
+every registered pass over every audit unit and returns the merged
+findings.  Passes are pure over the unit's captured artifacts — they
+never execute the computation they inspect.
+
+Findings carry a stable ``key`` (``pass:code:subject``) that is the unit
+of baseline accounting: :func:`diff_baseline` splits the error-severity
+keys of a run against the checked-in allowlist into *new* findings
+(regressions — fail CI) and *fixed* ones (baseline entries the run no
+longer produces — also fail CI, because a fixed finding must shrink the
+baseline in the same change that fixes it).  ``info`` findings are
+reported but never gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["Finding", "register_pass", "registered_passes", "run_passes",
+           "load_baseline", "diff_baseline", "BASELINE_SCHEMA"]
+
+BASELINE_SCHEMA = "analysis-baseline-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer finding with a baseline-stable identity.
+
+    ``key`` (``pass:code:subject``) must be deterministic across runs on
+    the same tree — subjects name the engine/artifact/leaf, never memory
+    addresses or counters.  ``detail``/``provenance`` are for humans and
+    stay out of the key so a reworded message does not churn the
+    baseline.
+    """
+
+    pass_name: str
+    code: str
+    subject: str
+    detail: str
+    provenance: str = ""
+    severity: str = "error"      # 'error' gates the baseline; 'info' reports
+
+    @property
+    def key(self) -> str:
+        return f"{self.pass_name}:{self.code}:{self.subject}"
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["key"] = self.key
+        return d
+
+
+_PASSES: Dict[str, Callable] = {}
+
+
+def register_pass(name: str):
+    """Decorator: register ``fn(unit) -> list[Finding]`` under ``name``."""
+    def deco(fn):
+        if name in _PASSES:
+            raise ValueError(f"analysis pass {name!r} already registered")
+        _PASSES[name] = fn
+        return fn
+    return deco
+
+
+def registered_passes() -> Tuple[str, ...]:
+    return tuple(_PASSES)
+
+
+def run_passes(units: Sequence, only: Optional[Sequence[str]] = None
+               ) -> List[Finding]:
+    """Run registered passes over every audit unit, merging findings."""
+    names = tuple(only) if only is not None else tuple(_PASSES)
+    unknown = [n for n in names if n not in _PASSES]
+    if unknown:
+        raise ValueError(
+            f"unknown analysis pass(es) {unknown}; "
+            f"registered: {sorted(_PASSES)}")
+    findings: List[Finding] = []
+    for unit in units:
+        for name in names:
+            findings.extend(_PASSES[name](unit))
+    return findings
+
+
+# ------------------------------------------------------------------ baseline
+def load_baseline(path) -> Dict[str, str]:
+    """Load the allowlist as ``{finding key: note}``."""
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(
+            f"baseline {path}: schema {data.get('schema')!r} != "
+            f"{BASELINE_SCHEMA!r}")
+    out = {}
+    for entry in data.get("findings", ()):
+        out[entry["key"]] = entry.get("note", "")
+    return out
+
+
+def diff_baseline(findings: Sequence[Finding], baseline: Dict[str, str]
+                  ) -> Tuple[List[Finding], List[str]]:
+    """Split error findings against the allowlist.
+
+    Returns ``(new, fixed)``: findings whose key is absent from the
+    baseline (regressions), and baseline keys no run finding produced
+    (stale entries that must be deleted alongside their fix).  Either
+    being non-empty fails the gate.
+    """
+    seen = {f.key for f in findings if f.severity == "error"}
+    new = [f for f in findings
+           if f.severity == "error" and f.key not in baseline]
+    fixed = sorted(k for k in baseline if k not in seen)
+    return new, fixed
+
+
+def baseline_payload(findings: Sequence[Finding],
+                     notes: Optional[Dict[str, str]] = None) -> dict:
+    """Serializable allowlist covering the given error findings."""
+    notes = notes or {}
+    keys = sorted({f.key for f in findings if f.severity == "error"})
+    return {"schema": BASELINE_SCHEMA,
+            "findings": [{"key": k, "note": notes.get(k, "")} for k in keys]}

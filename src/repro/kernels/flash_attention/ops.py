@@ -12,10 +12,38 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.analysis.costs import KernelCost, register_pallas_cost
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 
 __all__ = ["attention"]
+
+
+def _pallas_cost(eqn) -> KernelCost:
+    """HBM bytes of one flash launch (operands ``(q, k, v)``).
+
+    Q tiles and the output stream once (their index maps ignore the
+    inner kv axis); K/V tiles are re-DMA'd for every (head, q-block)
+    pair the grid sweeps — ``n_heads/n_kv_heads * n_q_blocks`` full
+    passes over the KV sequence, read from the grid in the equation's
+    ``grid_mapping`` so the count tracks the kernel's actual tiling.
+    """
+    q, k, v = eqn.invars
+    grid = tuple(eqn.params["grid_mapping"].grid)   # (b, h, n_q, n_kv)
+    n_q = int(grid[2])
+    h = q.aval.shape[2]
+    kvh = k.aval.shape[2]
+
+    def nbytes(var):
+        return int(var.aval.size) * int(var.aval.dtype.itemsize)
+
+    kv_sweeps = (h // kvh) * n_q
+    return KernelCost(
+        reads=(nbytes(q), nbytes(k) * kv_sweeps, nbytes(v) * kv_sweeps),
+        writes=tuple(nbytes(o) for o in eqn.outvars))
+
+
+register_pallas_cost("kernels/flash_attention/", _pallas_cost)
 
 
 def attention(

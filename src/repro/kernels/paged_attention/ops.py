@@ -13,10 +13,39 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.analysis.costs import KernelCost, register_pallas_cost
 from repro.kernels.paged_attention.kernel import paged_decode_attention
 from repro.kernels.paged_attention.ref import paged_decode_ref
 
 __all__ = ["paged_attention"]
+
+
+def _pallas_cost(eqn) -> KernelCost:
+    """HBM bytes of one kernel launch, from the equation's operand avals.
+
+    Operand order is fixed by ``kernel.py``'s pallas_call: ``(block,
+    pos, q, kp, vp)``.  The scalar-prefetch operands (block, pos) and q
+    (index map depends only on outer grid axes) stream once; the K/V
+    page blocks are driven by the *data-dependent* block-table index
+    map, which the grid walks once per (batch, kv_head, logical_page) —
+    every logical page's physical page is DMA'd whole, which is exactly
+    ``TrafficModel.kv_page_read_bytes`` at full occupancy.  The output
+    block is written once per (batch, kv_head).
+    """
+    block, pos, q, kp, vp = eqn.invars
+    b, n_lp = block.aval.shape
+    _, page, kvh, hd = kp.aval.shape
+    page_read = b * kvh * n_lp * page * hd * int(kp.aval.dtype.itemsize)
+
+    def nbytes(v):
+        return int(v.aval.size) * int(v.aval.dtype.itemsize)
+
+    return KernelCost(
+        reads=(nbytes(block), nbytes(pos), nbytes(q), page_read, page_read),
+        writes=tuple(nbytes(v) for v in eqn.outvars))
+
+
+register_pallas_cost("kernels/paged_attention/", _pallas_cost)
 
 
 def paged_attention(

@@ -5,10 +5,15 @@ import math
 
 import jax.numpy as jnp
 
+from repro.analysis.costs import register_pallas_cost, uniform_cost
 from repro.kernels.rate_match.kernel import BLOCK_SLOTS, schedule_pallas
 from repro.kernels.rate_match.ref import schedule_block_ref
 
 __all__ = ["schedule_bits", "BLOCK_SLOTS"]
+
+# single-sweep grid: the scalar rate operands stream once, each output
+# block is produced once — the uniform cost model is exact
+register_pallas_cost("kernels/rate_match/", uniform_cost)
 
 
 def schedule_bits(

@@ -9,10 +9,15 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.analysis.costs import register_pallas_cost, uniform_cost
 from repro.kernels.refresh_sim.kernel import BLOCK_ROWS, window_update_pallas
 from repro.kernels.refresh_sim.ref import window_update_ref
 
 __all__ = ["window_update", "BLOCK_ROWS"]
+
+# row-tiled single sweep: age rows in, age rows + per-block counts out,
+# every block touched exactly once — the uniform cost model is exact
+register_pallas_cost("kernels/refresh_sim/", uniform_cost)
 
 
 def window_update(

@@ -174,7 +174,8 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
 def build_decode_step(model: TransformerLM, mesh: Mesh,
                       policy: ShardingPolicy, batch: int, cache_len: int,
                       kv_seq_axis=None, per_slot_pos: bool = False,
-                      cache_factory=None, decode_backend: str = "gather"):
+                      cache_factory=None, decode_backend: str = "gather",
+                      donate_cache: bool = True):
     """One-token decode with sharded KV cache. Returns
     (step_fn, param_shardings, cache_shardings).
 
@@ -192,6 +193,16 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
     same either way (pool page dims keep ``ShardingPolicy.page_spec``):
     the kernel is opaque to GSPMD, which gathers its operands around
     the call while the cache itself stays sharded across steps.
+
+    ``donate_cache``: donate the cache argument into the step (the
+    default; in/out cache shardings match, so XLA updates the buffers —
+    including paged pool pages — in place instead of copying the full
+    cache every token).  The static analyzer's donation lint
+    (``repro.analysis``) checks the lowered executable actually carries
+    the donation, and its per-step byte accounting *assumes* it: an
+    un-donated cache is a copy the traffic cross-check would miss.
+    Disable only to lower a step whose caller must keep the input cache
+    alive (e.g. checkpoint-restore debugging).
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     pspecs = param_specs(jax.eval_shape(
@@ -224,7 +235,7 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
         in_shardings=(psh, csh, tok_sh, pos_sh),
         out_shardings=(NamedSharding(mesh, P(
             policy.batch_spec if batch > 1 else None, None)), csh),
-        donate_argnums=(1,),
+        donate_argnums=(1,) if donate_cache else (),
     )
     return step, psh, csh
 
@@ -488,8 +499,13 @@ class ServeEngine:
             # pin the insert output to the decode step's cache shardings,
             # so the slot-update round trip stays layout-stable on real
             # meshes (decode donates and re-emits the same placement).
+            # The batch cache is donated: an admit is a single-slot
+            # dynamic_update_slice, and without donation every admission
+            # copied the full max_batch cache (the donation lint in
+            # repro.analysis flagged exactly this executable).
             self._insert = jax.jit(self._insert_cache,
-                                   out_shardings=self._cache_sh)
+                                   out_shardings=self._cache_sh,
+                                   donate_argnums=(0,))
         self._keys = jax.jit(jax.vmap(
             lambda base, r, i: jax.random.fold_in(jax.random.fold_in(base, r), i),
             in_axes=(None, 0, 0)))
@@ -501,6 +517,54 @@ class ServeEngine:
         mode (``None`` for the contiguous cache) — the public handle to
         the resolved page budget and per-stream allocator state."""
         return self._table
+
+    # ------------------------------------------------------- introspection
+    def lowered_artifacts(self) -> List[dict]:
+        """The engine's lowered executables, packaged for static analysis.
+
+        Returns one entry per executable the serve loop dispatches —
+        the decode step, the top prefill bucket, and (contiguous
+        engines) the slot-insert — each a dict of the jitted function,
+        abstract arguments to trace/lower it with, per-argument roles
+        (``params`` / ``cache`` / ``other``), the argnums the engine
+        *semantically requires* to be donated, and the argument
+        shardings.  Everything is abstract (``jax.eval_shape`` /
+        ``ShapeDtypeStruct``): ``repro.analysis`` traces and lowers
+        these without executing anything, so an engine constructed with
+        abstract params works.  The serve loop itself never calls this.
+        """
+        aparams = jax.eval_shape(
+            lambda: self.model.init(jax.random.key(0)))
+        B = self.max_batch
+        if self._table is not None:
+            cache = jax.eval_shape(self._table.init_cache)
+        else:
+            cache = jax.eval_shape(
+                lambda: self.model.init_cache(B, self.max_len))
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        arts = [dict(
+            name="decode", fn=self._decode, args=(aparams, cache, tok, pos),
+            roles={0: "params", 1: "cache"},
+            expect_donate_argnums=(1,),
+            shardings=(None, self._cache_sh, None, None))]
+        top = self.buckets.ladder[-1]
+        arts.append(dict(
+            name="prefill", fn=self._prefill,
+            args=(aparams, jax.ShapeDtypeStruct((1, top), jnp.int32),
+                  jax.ShapeDtypeStruct((1,), jnp.int32)),
+            roles={0: "params"}, expect_donate_argnums=(),
+            shardings=None))
+        if self._insert is not None:
+            one = jax.eval_shape(
+                lambda: self.model.init_cache(1, self.max_ctx))
+            arts.append(dict(
+                name="insert", fn=self._insert,
+                args=(cache, one, jax.ShapeDtypeStruct((), jnp.int32)),
+                roles={0: "cache"},
+                expect_donate_argnums=(0,),
+                shardings=(self._cache_sh, None, None)))
+        return arts
 
     @property
     def prefill_executables(self) -> int:

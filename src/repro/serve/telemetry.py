@@ -164,9 +164,54 @@ class TrafficModel:
     @property
     def gather_view_write_bytes(self) -> int:
         """Bytes the materialized contiguous view costs to write per
-        slot per gather step (the gathered copy, sliced to the logical
-        cache length)."""
-        return sum(c * b for c, b in zip(self.kv_caps, self.kv_token_bytes))
+        slot per gather step.  The lowered computation gathers *whole
+        pages* — ``ceil(cache_len/page_size) * page_size`` rows per
+        layer — and only then slices to the logical cache length, so
+        the written copy is page-granular (the jaxpr-level accounting
+        the static auditor cross-checks; the previous row-sliced count
+        under-billed the tail page)."""
+        p = self.page_size
+        if not p:
+            return sum(c * b for c, b in
+                       zip(self.kv_caps, self.kv_token_bytes))
+        return sum((-(-c // p) * p) * b
+                   for c, b in zip(self.kv_caps, self.kv_token_bytes))
+
+    # -------------------------------------------------- per-class breakdown
+    #: Traffic classes of one decode step, the shared vocabulary of
+    #: telemetry and the jaxpr-level auditor (``repro.analysis``).
+    DECODE_CLASSES = ("kv_sweep_read", "kv_page_read", "kv_append_write",
+                      "state_read", "state_write",
+                      "gather_view_read", "gather_view_write")
+
+    def static_decode_classes(self, ctx_lengths: Sequence[int],
+                              mode: str) -> dict:
+        """Exact per-class bytes of ONE decode step over live slots with
+        the given context lengths, keyed by :attr:`DECODE_CLASSES`.
+
+        This is the analytic twin of the static traffic auditor: at
+        full occupancy (every slot at its layer cache length) the
+        structural byte count of the lowered decode step equals this
+        breakdown class-for-class, which ``repro.analysis`` asserts.
+        :meth:`ServeTelemetry.record_decode` accumulates through the
+        same method, so the runtime accounting cannot drift from the
+        statically-verified one.
+        """
+        live = len(ctx_lengths)
+        cls = {k: 0 for k in self.DECODE_CLASSES}
+        cls["state_read"] = self.state_bytes * live
+        cls["state_write"] = self.state_bytes * live
+        cls["kv_append_write"] = self.kv_write_bytes * live
+        if mode == "pallas_paged":
+            cls["kv_page_read"] = sum(self.kv_page_read_bytes(c)
+                                      for c in ctx_lengths)
+        else:
+            cls["kv_sweep_read"] = sum(self.kv_read_bytes(c)
+                                       for c in ctx_lengths)
+        if mode == "gather":
+            cls["gather_view_read"] = self.gather_view_read_bytes * live
+            cls["gather_view_write"] = self.gather_view_write_bytes * live
+        return cls
 
 
 class ServeTelemetry:
@@ -273,16 +318,17 @@ class ServeTelemetry:
         self.tokens_generated += live
         self.max_live = max(self.max_live, live)
         self.param_read_bytes_total += t.param_read_bytes
-        if self.decode_mode == "pallas_paged":
-            kv = sum(t.kv_page_read_bytes(self._scaled(c))
-                     for c in ctx_lengths)
-        else:
-            kv = sum(t.kv_read_bytes(self._scaled(c)) for c in ctx_lengths)
-        self.kv_read_bytes_total += t.state_bytes * live + kv
-        self.write_bytes_total += (t.kv_write_bytes + t.state_bytes) * live
-        if self.decode_mode == "gather":
-            self.gather_read_bytes_total += t.gather_view_read_bytes * live
-            self.gather_write_bytes_total += t.gather_view_write_bytes * live
+        # one source of truth: the same per-class breakdown the static
+        # auditor (repro.analysis) verifies against the lowered jaxpr
+        cls = t.static_decode_classes(
+            [self._scaled(c) for c in ctx_lengths], self.decode_mode)
+        self.kv_read_bytes_total += (cls["state_read"]
+                                     + cls["kv_sweep_read"]
+                                     + cls["kv_page_read"])
+        self.write_bytes_total += (cls["kv_append_write"]
+                                   + cls["state_write"])
+        self.gather_read_bytes_total += cls["gather_view_read"]
+        self.gather_write_bytes_total += cls["gather_view_write"]
 
     def _scaled(self, ctx: int) -> int:
         return int(round(ctx * self.ctx_scale))

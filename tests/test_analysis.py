@@ -1,0 +1,307 @@
+"""Static analyzer: golden findings on hand-built jaxprs + engine audits.
+
+Three layers, cheapest first:
+
+* **Walker goldens** — tiny ``jax.make_jaxpr`` programs exercising one
+  billing rule each (structural ops free, compute reads billed, gather
+  materializes the view, scatter/dus stays in-place, scan multiplies,
+  missing pallas cost handler reported).
+* **Pass goldens** — hand-built :class:`Artifact`/:class:`AuditUnit`
+  objects that force exactly one finding per registered pass (traffic
+  drift, GSPMD gather around a pallas call, unsharded pool page dim,
+  donation / large-constant / f64 hygiene), pinning the finding *keys*
+  the baseline machinery gates on.
+* **Engine cross-checks** — real engines (abstract params, trace only:
+  nothing executes) across archs x decode backends must derive byte
+  counts equal to ``TrafficModel.static_decode_classes`` class for
+  class, and produce zero error findings on a solo topology.
+
+The 2-device GSPMD-gather detection lives in
+``test_serve_multidevice.py`` (it needs a forced device count before
+jax initializes, hence a subprocess).
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+from jax.sharding import PartitionSpec
+
+from repro.analysis import decode_traffic_report, unit_from_engine
+from repro.analysis.artifacts import Artifact, AuditUnit
+from repro.analysis.costs import (KernelCost, lookup_pallas_cost,
+                                  register_pallas_cost, uniform_cost)
+from repro.analysis.jaxpr_walk import (PallasSite, Taint, TRAFFIC_CLASSES,
+                                       WalkResult, walk_jaxpr)
+from repro.analysis.lints import hygiene_pass, sharding_pass
+from repro.analysis.registry import (BASELINE_SCHEMA, Finding,
+                                     baseline_payload, diff_baseline,
+                                     load_baseline, registered_passes,
+                                     run_passes)
+from repro.analysis.traffic import GATED_CLASSES, traffic_pass
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.serve import PagedCacheConfig, ServeEngine, TrafficModel
+
+BASELINE = (pathlib.Path(__file__).parent.parent
+            / "src/repro/analysis/baseline.json")
+GSPMD_KEY = ("sharding:gspmd-gather-around-pallas-call:"
+             "qwen1.5-0.5b/pallas_paged/mesh2:decode:kernels/paged_attention")
+
+
+def _kv(src=0, **kw):
+    return Taint("kv", resident=True, inplace=True, src=src, **kw)
+
+
+def _bytes(x):
+    return int(np.prod(x.shape)) * x.dtype.itemsize
+
+
+# --------------------------------------------------------------- walker rules
+def test_structural_ops_are_free_and_keep_inplace():
+    closed = jax.make_jaxpr(lambda k: k.T.reshape(4, 4))(
+        jnp.ones((2, 8), jnp.float32))
+    res = walk_jaxpr(closed, [_kv()])
+    assert all(v == 0 for v in res.buckets.values())
+    t = res.outvar_taints[0]
+    assert t is not None and t.inplace and t.resident and t.cls == "kv"
+
+
+def test_compute_read_bills_resident_operand_once():
+    k = jnp.ones((2, 8), jnp.float32)
+    closed = jax.make_jaxpr(lambda k: (k * 2.0).sum())(k)
+    res = walk_jaxpr(closed, [_kv()])
+    assert res.buckets["kv_sweep_read"] == _bytes(k)
+    # the product is a fresh intermediate: summing it costs nothing
+    assert res.outvar_taints[0] is None
+
+
+def test_dynamic_update_slice_bills_update_bytes_in_place():
+    cache = jnp.zeros((8, 4), jnp.float32)
+    upd = jnp.ones((1, 4), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))(
+            cache, upd, 3)
+    res = walk_jaxpr(closed, [_kv(), None, None])
+    assert res.buckets["kv_append_write"] == _bytes(upd)
+    assert res.buckets["kv_sweep_read"] == 0      # no full-cache re-read
+    t = res.outvar_taints[0]
+    assert t is not None and t.inplace            # same buffer flows out
+
+
+def test_pool_gather_materializes_resident_view():
+    pool = jnp.zeros((8, 4, 2), jnp.float32)      # 8 pages
+    idx = jnp.array([0, 3, 1])
+
+    def f(pool, idx):
+        view = pool[idx]                          # lax.gather
+        return (view * 2.0).sum()                 # sweeping the view
+
+    closed = jax.make_jaxpr(f)(pool, idx)
+    res = walk_jaxpr(closed, [Taint("kv_pool", src=0), None])
+    view_bytes = 3 * 4 * 2 * 4
+    assert res.buckets["gather_view_read"] == view_bytes
+    assert res.buckets["gather_view_write"] == view_bytes
+    assert res.buckets["kv_sweep_read"] == view_bytes
+
+
+def test_scan_multiplies_body_bytes_by_trip_count():
+    w = jnp.ones((4, 4), jnp.float32)
+    xs = jnp.zeros((5,), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda w, xs: jax.lax.scan(
+            lambda c, x: (c + (w * x).sum(), None), 0.0, xs))(w, xs)
+    res = walk_jaxpr(closed, [Taint("param", src=0), None])
+    assert res.buckets["param_read"] == _bytes(w) * 5
+
+
+def test_unregistered_pallas_call_is_reported_not_guessed():
+    import jax.experimental.pallas as pl
+
+    def _copy(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def f(x):
+        return pl.pallas_call(
+            _copy, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+    closed = jax.make_jaxpr(f)(jnp.ones((4, 4), jnp.float32))
+    res = walk_jaxpr(closed, [_kv()])
+    assert any(p.startswith("missing-cost-handler") for p in res.problems)
+    (site,) = res.pallas_sites
+    assert site.operand_taints[0].cls == "kv"
+    assert all(v == 0 for v in res.buckets.values())   # never guesses
+
+
+# ------------------------------------------------------------- cost handlers
+def test_every_repo_kernel_registers_a_cost_handler():
+    import repro.analysis.traffic  # noqa: F401  (imports the ops modules)
+    for kernel in ("flash_attention", "paged_attention", "rate_match",
+                   "refresh_sim"):
+        assert lookup_pallas_cost(
+            f"_kernel at /x/src/repro/kernels/{kernel}/kernel.py:1"
+        ) is not None, kernel
+
+
+def test_register_pallas_cost_rejects_conflicting_handler():
+    register_pallas_cost("tests/nonexistent-kernel/", uniform_cost)
+    register_pallas_cost("tests/nonexistent-kernel/", uniform_cost)  # idempotent
+    with pytest.raises(ValueError, match="already registered"):
+        register_pallas_cost("tests/nonexistent-kernel/",
+                             lambda eqn: KernelCost((), ()))
+
+
+# ------------------------------------------------------- pass golden findings
+def _unit(artifact, mode="contiguous", axis_sizes=None, data_axes=(),
+          page_size=0, live=2, ctx=32):
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    return AuditUnit(
+        label=f"hand/{mode}/solo", cfg_name=cfg.name, mode=mode,
+        traffic=TrafficModel.from_config(cfg, ctx, page_size=page_size),
+        live=live, ctx=ctx, axis_sizes=dict(axis_sizes or {}),
+        data_axes=tuple(data_axes), artifacts=[artifact])
+
+
+def _artifact(closed, seeds, *, specs=None, donated=None, expect=None,
+              consts=(), out_names=None):
+    n = len(seeds)
+    return Artifact(
+        name="decode", closed_jaxpr=closed, seeds=tuple(seeds),
+        invar_labels=tuple(f"arg{i}" for i in range(n)),
+        arg_specs=tuple(specs or [None] * n),
+        donated=tuple(donated or [False] * n),
+        expect_donated=tuple(expect or [False] * n),
+        out_leaf_names=tuple(out_names
+                             or [""] * len(closed.jaxpr.outvars)),
+        consts=tuple(consts))
+
+
+def test_traffic_pass_flags_drift_per_class():
+    # a decode step that moves zero cache bytes, against a model that
+    # expects a full KV sweep: every non-zero expected class must drift
+    closed = jax.make_jaxpr(lambda x: x + 1.0)(jnp.ones((2, 2), jnp.float32))
+    unit = _unit(_artifact(closed, [None]))
+    findings = traffic_pass(unit)
+    codes = {f.code for f in findings}
+    assert codes == {"traffic-drift"}
+    drifted = {f.subject.rsplit(":", 1)[-1] for f in findings}
+    expected = unit.traffic.static_decode_classes([32, 32], "contiguous")
+    assert drifted == {k for k in GATED_CLASSES if expected[k] != 0}
+    assert "kv_sweep_read" in drifted
+    key = next(iter(findings)).key
+    assert key.startswith("traffic:traffic-drift:hand/contiguous/solo:decode")
+
+
+def test_sharding_pass_flags_gspmd_gather_around_pallas_call():
+    closed = jax.make_jaxpr(lambda p: p.sum())(jnp.zeros((8, 8, 2, 4)))
+    art = _artifact(closed, [Taint("kv_pool", src=0)],
+                    specs=[PartitionSpec("data", None, None, None)])
+    # inject the walk: one pallas site consuming the sharded pool leaf
+    art._walk = WalkResult(
+        buckets={c: 0 for c in TRAFFIC_CLASSES},
+        pallas_sites=[PallasSite(
+            name_and_src="_kernel at /x/src/repro/kernels/paged_attention/"
+                         "kernel.py:51",
+            multiplier=1,
+            operand_taints=(Taint("kv_pool", src=0),),
+            operand_shapes=((8, 8, 2, 4),))],
+        problems=[], outvar_taints=(None,))
+    unit = _unit(art, mode="pallas_paged", axis_sizes={"data": 2, "model": 1},
+                 page_size=8)
+    findings = sharding_pass(unit)
+    gather = [f for f in findings
+              if f.code == "gspmd-gather-around-pallas-call"]
+    assert len(gather) == 1
+    assert gather[0].subject.endswith(":decode:kernels/paged_attention")
+    assert "arg0" in gather[0].detail
+
+
+def test_sharding_pass_flags_unsharded_pool_page_dim():
+    closed = jax.make_jaxpr(lambda p: p.sum())(jnp.zeros((8, 8, 2, 4)))
+    art = _artifact(closed, [Taint("kv_pool", src=0)])   # spec: replicated
+    unit = _unit(art, mode="pallas_paged", axis_sizes={"data": 2},
+                 data_axes=("data",), page_size=8)
+    codes = {f.code for f in sharding_pass(unit)}
+    assert "pool-page-dim-unsharded" in codes
+
+
+def test_sharding_pass_silent_on_single_device():
+    closed = jax.make_jaxpr(lambda p: p.sum())(jnp.zeros((8, 8, 2, 4)))
+    art = _artifact(closed, [Taint("kv_pool", src=0)])
+    assert sharding_pass(_unit(art, axis_sizes={"data": 1})) == []
+
+
+def test_hygiene_pass_flags_donation_constants_and_f64():
+    with enable_x64():
+        closed = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones(4, jnp.float64))
+    art = _artifact(closed, [_kv()], expect=[True], donated=[False],
+                    consts=(np.zeros(1 << 19, np.float32),))   # 2 MiB
+    codes = {f.code for f in hygiene_pass(_unit(art))}
+    assert codes == {"undonated-cache-buffer", "large-captured-constant",
+                     "f64-promotion"}
+
+
+def test_hygiene_pass_clean_artifact_is_silent():
+    closed = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones(4, jnp.float32))
+    art = _artifact(closed, [_kv()], expect=[True], donated=[True])
+    assert hygiene_pass(_unit(art)) == []
+
+
+# --------------------------------------------------------- registry/baseline
+def test_all_three_passes_are_registered():
+    assert set(registered_passes()) >= {"traffic", "sharding", "hygiene"}
+    with pytest.raises(ValueError, match="unknown analysis pass"):
+        run_passes([], only=["nonesuch"])
+
+
+def test_diff_baseline_gates_new_and_stale_not_info():
+    base = {"sharding:gspmd:x": "known"}
+    known = Finding("sharding", "gspmd", "x", "d")
+    new = Finding("traffic", "traffic-drift", "y", "d")
+    info = Finding("hygiene", "note", "z", "d", severity="info")
+    got_new, fixed = diff_baseline([known, new, info], base)
+    assert [f.key for f in got_new] == [new.key] and fixed == []
+    # baselined finding fixed -> its entry is stale and must be deleted
+    got_new, fixed = diff_baseline([info], base)
+    assert got_new == [] and fixed == ["sharding:gspmd:x"]
+    # info findings never enter a regenerated baseline
+    assert baseline_payload([info])["findings"] == []
+
+
+def test_checked_in_baseline_has_only_the_known_gspmd_gather():
+    data = json.loads(BASELINE.read_text())
+    assert data["schema"] == BASELINE_SCHEMA
+    assert [e["key"] for e in data["findings"]] == [GSPMD_KEY]
+    assert load_baseline(BASELINE)[GSPMD_KEY]      # note explains the gap
+
+
+# ------------------------------------------------- engine-level cross-checks
+CROSS_ARCHS = ("qwen1.5-0.5b", "gemma2-9b", "recurrentgemma-2b")
+
+
+def _audit_unit(arch, mode):
+    cfg = get_config(arch, smoke=True)
+    model = TransformerLM(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    kw = dict(max_len=32, max_batch=2)
+    if mode != "contiguous":
+        kw.update(paged=PagedCacheConfig(page_size=8), decode_backend=mode)
+    return unit_from_engine(ServeEngine(model, params, **kw), arch)
+
+
+@pytest.mark.parametrize("mode", ("contiguous", "gather", "pallas_paged"))
+@pytest.mark.parametrize("arch", CROSS_ARCHS)
+def test_static_audit_matches_telemetry_exactly(arch, mode):
+    unit = _audit_unit(arch, mode)
+    rep = decode_traffic_report(unit)
+    assert rep["problems"] == []
+    for k in GATED_CLASSES:
+        assert rep["derived"].get(k, 0) == rep["expected"][k], (
+            f"{arch}/{mode}: {k} derived {rep['derived'].get(k, 0)} "
+            f"!= telemetry {rep['expected'][k]}")
+    # solo topology: no pass may produce an error finding
+    errors = [f for f in run_passes([unit]) if f.severity == "error"]
+    assert errors == [], [f.key for f in errors]

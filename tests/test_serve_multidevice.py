@@ -89,14 +89,44 @@ print("MULTIDEVICE_SERVE_OK", flush=True)
 """
 
 
-def test_two_device_mesh_serve_matches_solo():
+def _env():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(os.path.dirname(__file__), "..", "src"),
                     env.get("PYTHONPATH")) if p)
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+    return env
+
+
+def test_two_device_mesh_serve_matches_solo():
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=_env(),
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, (
         f"multi-device serve failed\nstdout:\n{proc.stdout}\n"
         f"stderr:\n{proc.stderr[-4000:]}")
     assert "MULTIDEVICE_SERVE_OK" in proc.stdout
+
+
+def test_static_analyzer_detects_gspmd_gather_and_gate_passes():
+    """The static auditor on the same 2-device topology: the GSPMD
+    all-gather that the mesh engine above provokes around the opaque
+    paged-attention kernel must surface as exactly the finding key the
+    checked-in baseline allowlists — so the gate exits 0, and any drift
+    in either direction (finding gone stale, or a new finding) fails.
+
+    ``python -m repro.analysis`` forces the 2-device CPU topology
+    itself, which is why this runs as a subprocess like the serve test.
+    """
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--check-baseline",
+         "--archs", "qwen1.5-0.5b"],
+        env=_env(), capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"analysis gate failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr[-4000:]}")
+    key = ("sharding:gspmd-gather-around-pallas-call:"
+           "qwen1.5-0.5b/pallas_paged/mesh2:decode:kernels/paged_attention")
+    assert key in proc.stdout, proc.stdout       # detected on the mesh unit
+    assert "analysis gate: OK" in proc.stdout
+    # the solo units around it must be clean: the one baselined finding
+    # is the only finding the reduced matrix produces
+    assert proc.stdout.count("[error]") == 1, proc.stdout
