@@ -22,14 +22,25 @@ timed, at full occupancy, next to the telemetry split — so the
 trajectory captures auditor/telemetry agreement (``static_match``)
 per arch and backend, not just throughput.
 
+v3 adds the mesh-scale story from the partitioning dry-run
+(``python -m repro.analysis --mesh 8 --partition-only``, one
+subprocess so the forced 8-device CPU topology never touches the timed
+engines): ``static_per_device_bytes`` is the decode step's per-device
+HBM bill under the weak-scaling audit geometry at 8 devices, and
+``collective_bytes`` the decode step's total cross-device wire bytes
+per device per step — both exact, both trajectory signals (the bill
+must track the v2 global bill / 8, and collective bytes must *drop*
+when ROADMAP item 3's shard_map kernel sharding lands).
+
 Schema (``BENCH_serve.json``)::
 
-    {"schema": "serve-decode-v2",
+    {"schema": "serve-decode-v3",
      "rows": [{"arch", "batch", "backend", "decode_steps",
                "steps_per_sec", "tok_per_sec",
                "kv_read_bytes_per_step", "gather_bytes_per_step",
                "static_bytes_per_step", "static_classes",
-               "static_match", "page_size"}, ...]}
+               "static_match", "page_size", "mesh_devices",
+               "static_per_device_bytes", "collective_bytes"}, ...]}
 
     python benchmarks/serve_sweep.py [--archs all] [--out BENCH_serve.json]
 """
@@ -41,6 +52,9 @@ if __package__ in (None, ""):
 import argparse
 import json
 import os
+import subprocess
+import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -58,6 +72,43 @@ from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
 DEFAULT_ARCHS = ("qwen1.5-0.5b", "gemma2-9b", "recurrentgemma-2b")
 PROMPT_LENS = (4, 9, 6, 12)
 SERVE_CTX = 4096      # deployment context for the byte constants
+PARTITION_MESH = 8    # abstract mesh size for the per-device columns
+
+
+def partition_dry_run(archs) -> dict:
+    """Per-device decode columns from the abstract-mesh dry-run.
+
+    Runs ``python -m repro.analysis --mesh 8 --partition-only`` in a
+    subprocess (it must force 8 host CPU devices before jax initializes
+    — this process's timed engines stay on the default topology) and
+    reduces each partition unit to the two v3 columns.  Returns
+    ``{(arch, backend): {"static_per_device_bytes", "collective_bytes"}}``;
+    empty on failure (the columns then read ``None`` — the bench never
+    fails on the dry-run, the analysis CI gate owns that).
+    """
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "partition.json")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis",
+             "--mesh", str(PARTITION_MESH), "--partition-only",
+             "--partition-archs", *archs, "--json", out],
+            capture_output=True, text=True)
+        if not os.path.exists(out):
+            print(f"partition dry-run produced no JSON "
+                  f"(exit {proc.returncode}):\n{proc.stderr[-2000:]}",
+                  file=sys.stderr)
+            return {}
+        units = json.load(open(out)).get("partition", {})
+    cols = {}
+    for label, u in units.items():
+        arch, mode, _ = label.split("/")
+        cols[(arch, mode)] = {
+            "static_per_device_bytes": sum(u["bill"]["per_device"].values()),
+            "collective_bytes": sum(
+                row["wire_bytes_per_device"]
+                for row in u["ledger"].get("decode", ())),
+        }
+    return cols
 
 
 def sweep_arch(arch: str, max_batch: int, new_tokens: int,
@@ -132,6 +183,12 @@ def main():
     for arch in archs:
         rows.extend(sweep_arch(arch, args.max_batch, args.new_tokens,
                                args.page_size))
+    per_device = partition_dry_run(archs)
+    for r in rows:
+        cols = per_device.get((r["arch"], r["backend"]), {})
+        r["mesh_devices"] = PARTITION_MESH if cols else None
+        r["static_per_device_bytes"] = cols.get("static_per_device_bytes")
+        r["collective_bytes"] = cols.get("collective_bytes")
     for r in rows:
         us = 1e6 / r["steps_per_sec"] if r["steps_per_sec"] else 0.0
         emit(f"serve_decode_{r['arch']}_{r['backend']}", us,
@@ -139,13 +196,15 @@ def main():
              f"kv_read/step={r['kv_read_bytes_per_step']} "
              f"gather/step={r['gather_bytes_per_step']} "
              f"static/step={r['static_bytes_per_step']} "
+             f"perdev@{PARTITION_MESH}={r['static_per_device_bytes']} "
+             f"collective/dev={r['collective_bytes']} "
              f"audit={'ok' if r['static_match'] else 'DRIFT'}")
     if not all(r["static_match"] for r in rows):
         raise SystemExit("static audit disagrees with telemetry — "
                          "run python -m repro.analysis for the class diff")
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
-        json.dump({"schema": "serve-decode-v2", "rows": rows}, f, indent=1)
+        json.dump({"schema": "serve-decode-v3", "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)")
 
 

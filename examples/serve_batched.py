@@ -16,6 +16,7 @@ we just ran.
     PYTHONPATH=src python examples/serve_batched.py [--new-tokens 48]
 """
 import argparse
+import sys
 import time
 
 import jax
@@ -130,6 +131,9 @@ def main():
             print(f"  {k:<20s} {d:>14,d} {e:>14,d}{mark}")
         print("  agreement: " + ("exact" if rep["match"] else
                                  "DRIFT (run python -m repro.analysis)"))
+        audit_ok = rep["match"]
+    else:
+        audit_ok = True
 
     # RTC on THIS loop (weights in LPDDR-class memory, edge serving):
     w = tele.workload_profile(name=f"{full.name}/serve")
@@ -141,7 +145,10 @@ def main():
           f"engine-measured traffic {w.traffic_bytes_per_s/1e9:.2f} GB/s): "
           f"refresh energy -{rep.refresh_savings:.1%}, "
           f"DRAM energy -{rep.dram_savings:.1%}")
+    # --audit is a gate, not a printout: scripted callers (CI smoke)
+    # must see the static-vs-telemetry drift as a failing exit status
+    return 0 if audit_ok else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -55,27 +55,64 @@ host-sync callbacks, and cache arguments whose lowered executables do
 not donate them (an un-donated cache is a full copy per step that the
 byte accounting would silently miss).
 
+**Partitioning pass** (:mod:`.partition`, :mod:`.hlo_walk`).  The jaxpr
+walk sees the *global* computation; production scale needs the
+*per-device* story.  The partitioning pass lowers the engine's decode
+step, top prefill bucket, and contiguous insert under abstract meshes
+of 2/8/64/512 devices (``jax.sharding.AbstractMesh`` describes the
+mesh; ``repro.dist.sharding.as_concrete_mesh`` binds it to forced host
+CPU devices because this jax cannot lower on an abstract mesh, and
+``jit.lower(...).compile()`` runs GSPMD without executing — compile
+cost is O(module), independent of mesh size).  :mod:`.hlo_walk` then
+parses the partitioned HLO text (no structured instruction API exists
+in this jaxlib) for every ``all-gather``/``all-reduce``/
+``reduce-scatter``/``all-to-all``/``collective-permute``, with exact
+ring-schedule wire bytes from the sharded shapes and a tensor-family
+taxonomy from dtype + jax provenance metadata.  Three gates come out:
+the **collective ledger** (every collective attributed to the tensor it
+moves), the **per-device HBM bill** (``static_decode_classes`` split by
+the cache shardings, asserted mesh-size-invariant class-for-class — the
+audit geometry weak-scales at one slot + five pool pages per device, so
+any per-device growth is a locality regression), and the **page-pool
+locality lint** (``partition:pool-collective:...@mesh=N`` error
+findings for every collective moving ``kv_pool``/``state_pool`` pages —
+the mesh-parameterized family generalizing the single PR 6 GSPMD-gather
+baseline, which landing native ``shard_map`` kernel sharding must drain
+from ``baseline.json``).  Invariance is the acceptance proxy for
+ROADMAP item 3: it is exactly the property the shard_map rewrite must
+preserve while emptying the collective family.
+
 **Baseline policy** (:mod:`.registry`, ``baseline.json``).  Error
 findings diff against the checked-in allowlist: a finding not in the
 baseline fails (regression), and a baseline entry no longer produced
 also fails (the fix must shrink the baseline in the same change).
-``info`` findings never gate.  ``python -m repro.analysis
---write-baseline`` regenerates the file; ``--check-baseline`` is the CI
-gate.
+``info`` findings never gate.  Mesh-parameterized keys (``...@mesh=N``)
+are only scored when mesh N was audited — a ``--mesh 2`` run can
+neither confirm nor retire the ``@mesh=512`` family, and
+``--write-baseline`` preserves out-of-scope entries verbatim.
+``python -m repro.analysis --write-baseline`` regenerates the file;
+``--check-baseline`` is the CI gate.
 
 Run ``python -m repro.analysis`` for the default audit matrix (4 archs
 x both paged decode backends, plus a forced-2-device mesh audit of the
-kernel backend).
+kernel backend); add ``--mesh 8 --mesh 64 ...`` for the partitioning
+pass.
 """
-from repro.analysis.artifacts import Artifact, AuditUnit, unit_from_engine
+from repro.analysis.artifacts import (Artifact, AuditUnit,
+                                      sharded_leaf_factors, unit_from_engine)
 from repro.analysis.costs import KernelCost, register_pallas_cost
+from repro.analysis.hlo_walk import (Collective, classify_collective,
+                                     ledger_rows, parse_collectives)
 from repro.analysis.jaxpr_walk import Taint, walk_jaxpr
-from repro.analysis.registry import (Finding, diff_baseline, load_baseline,
-                                     register_pass, run_passes)
-from repro.analysis.traffic import decode_traffic_report
+from repro.analysis.registry import (Finding, diff_baseline, key_mesh_size,
+                                     load_baseline, register_pass,
+                                     run_passes)
+from repro.analysis.traffic import decode_traffic_report, split_per_device
 import repro.analysis.lints    # noqa: F401  (registers sharding/hygiene)
 
 __all__ = ["Artifact", "AuditUnit", "unit_from_engine", "KernelCost",
            "register_pallas_cost", "Taint", "walk_jaxpr", "Finding",
            "diff_baseline", "load_baseline", "register_pass", "run_passes",
-           "decode_traffic_report"]
+           "decode_traffic_report", "Collective", "classify_collective",
+           "ledger_rows", "parse_collectives", "sharded_leaf_factors",
+           "split_per_device", "key_mesh_size"]

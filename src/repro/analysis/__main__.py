@@ -3,35 +3,70 @@
 ``python -m repro.analysis`` builds the default audit matrix — smoke
 configs of the default archs x both paged decode backends on one
 device, plus a 2-device mesh audit of the Pallas kernel backend (the
-process forces two host CPU devices *before* jax initializes, so one
-run covers both topologies) — runs every registered pass, and diffs the
+process forces host CPU devices *before* jax initializes, so one run
+covers both topologies) — runs every registered pass, and diffs the
 error findings against the checked-in ``baseline.json``.
 
-Exit status 0 iff no new findings and no stale baseline entries.
+``--mesh N`` (repeatable) additionally runs the partitioning pass
+(:mod:`repro.analysis.partition`): the partition matrix is lowered
+under an abstract N-device mesh, GSPMD-partitioned without executing,
+and gated on the collective-traffic ledger, the per-device HBM bill
+(asserted mesh-size-invariant across every requested size), and the
+page-pool locality lint.  Partition finding keys end ``@mesh=N``, so
+the baseline diff only scores entries for audited sizes.
+
+Exit status 0 iff no new findings and no stale in-scope baseline
+entries.
 
 * ``--check-baseline`` is the CI gate (same as the default, spelled
   explicitly so workflows read as intended).
 * ``--write-baseline`` regenerates ``baseline.json`` from the current
-  findings (use when intentionally accepting or fixing a finding).
-* ``--json PATH`` dumps the full findings + per-unit traffic report.
+  findings (use when intentionally accepting or fixing a finding);
+  entries outside the run's mesh scope are preserved verbatim.
+* ``--json PATH`` dumps findings + traffic reports + per-mesh
+  collective ledgers.
+* ``--partition-only`` skips the jaxpr audit matrix (fast path for
+  benchmarks that only need the dry-run ledgers).
 """
 from __future__ import annotations
 
 import os
+import sys
 
-# Force a 2-device CPU topology before jax initializes any backend:
-# the mesh audit needs >1 device, and analysis never executes anything
-# so CPU is always the right platform.
+
+def _forced_device_count(argv) -> int:
+    """Host CPU devices this run needs: the largest requested --mesh
+    size, floor 2 (the always-on 2-device mesh audit).  Parsed from raw
+    argv because jax must be configured before argparse/imports run."""
+    vals = []
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            vals.append(argv[i + 1])
+        elif a.startswith("--mesh="):
+            vals.append(a.split("=", 1)[1])
+    n = 2
+    for v in vals:
+        try:
+            n = max(n, int(v))
+        except ValueError:
+            pass
+    return n
+
+
+# Force the CPU topology before jax initializes any backend: the mesh
+# audits need the devices to exist, and analysis never executes
+# anything so CPU is always the right platform.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 if "--xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
-                               + os.environ.get("XLA_FLAGS", ""))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{_forced_device_count(sys.argv)} "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import json
 import pathlib
-import sys
 
 DEFAULT_ARCHS = ("qwen1.5-0.5b", "gemma2-9b", "recurrentgemma-2b",
                  "falcon-mamba-7b")
@@ -98,6 +133,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-multidevice", dest="multidevice",
                     action="store_false",
                     help="skip the 2-device mesh audit")
+    ap.add_argument("--mesh", action="append", type=int, default=[],
+                    metavar="N",
+                    help="run the abstract-mesh partitioning pass at N "
+                         "devices (repeatable; sizes are also cross-"
+                         "checked for per-device invariance)")
+    ap.add_argument("--partition-archs", nargs="+", default=None,
+                    help="archs for the partition matrix (default: one "
+                         "KV-pool arch + one state-pool arch)")
+    ap.add_argument("--partition-only", action="store_true",
+                    help="skip the jaxpr audit matrix; run only the "
+                         "--mesh partitioning pass")
     ap.add_argument("--baseline", type=pathlib.Path,
                     default=DEFAULT_BASELINE)
     ap.add_argument("--check-baseline", action="store_true",
@@ -110,12 +156,16 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from repro.analysis.registry import (baseline_payload, diff_baseline,
-                                         load_baseline, run_passes)
-    from repro.analysis.traffic import decode_traffic_report
+                                         key_in_scope, load_baseline,
+                                         run_passes)
+    from repro.analysis.traffic import GATED_CLASSES, decode_traffic_report
 
-    units = build_units(args.archs, args.backends,
-                        multidevice=args.multidevice)
-    findings = run_passes(units)
+    if args.partition_only and not args.mesh:
+        ap.error("--partition-only needs at least one --mesh size")
+
+    units = [] if args.partition_only else build_units(
+        args.archs, args.backends, multidevice=args.multidevice)
+    findings = run_passes(units) if units else []
 
     reports = {}
     for unit in units:
@@ -127,6 +177,33 @@ def main(argv=None) -> int:
         print(f"[traffic] {status} {unit.label}: "
               f"{sum(rep['derived'].get(k, 0) for k in rep['expected'])} "
               f"bytes/step across {len(rep['expected'])} gated classes")
+
+    partition_units = []
+    audited_meshes = sorted(set(args.mesh))
+    # scope_archs narrows meshed-key staleness to the archs this run
+    # actually partitioned: `--partition-archs qwen... --mesh 8` must
+    # not declare the other archs' @mesh=8 entries fixed
+    scope_archs = None
+    if audited_meshes:
+        from repro.analysis.partition import (PARTITION_ARCHS,
+                                              build_partition_units,
+                                              invariance_findings,
+                                              partition_findings)
+        scope_archs = tuple(args.partition_archs or PARTITION_ARCHS)
+        partition_units = build_partition_units(
+            scope_archs, audited_meshes)
+        for u in partition_units:
+            findings.extend(partition_findings(u))
+            wire = sum(row["wire_bytes_per_device"]
+                       for rows in u.ledger().values() for row in rows)
+            per_dev = sum(u.bill["per_device"].get(k, 0)
+                          for k in GATED_CLASSES)
+            n_col = sum(len(c) for c in u.collectives.values())
+            print(f"[partition] {u.label}: {n_col} collectives "
+                  f"({wire:,} wire bytes/device), per-device decode "
+                  f"bill {per_dev:,} bytes/step")
+        findings.extend(invariance_findings(partition_units))
+
     for f in findings:
         print(f"[{f.severity}] {f.key}\n    {f.detail}"
               + (f"\n    at {f.provenance}" if f.provenance else ""))
@@ -137,20 +214,39 @@ def main(argv=None) -> int:
         args.json.parent.mkdir(parents=True, exist_ok=True)
         args.json.write_text(json.dumps(
             {"findings": [f.to_dict() for f in findings],
-             "traffic": reports}, indent=2, sort_keys=True))
+             "traffic": reports,
+             "partition": {u.label: u.to_dict()
+                           for u in partition_units}},
+            indent=2, sort_keys=True))
         print(f"wrote {args.json}")
 
+    mesh_scope = set(audited_meshes)
+    unmeshed_in_scope = not args.partition_only
     if args.write_baseline:
         notes = {}
         if args.baseline.exists():
             notes = load_baseline(args.baseline)
+        # keep entries this run could not have reproduced (unaudited
+        # mesh sizes / skipped jaxpr matrix) instead of dropping them
+        preserve = {k: v for k, v in notes.items()
+                    if not key_in_scope(k, mesh_scope, unmeshed_in_scope,
+                                        scope_archs)}
+        # default notes for brand-new entries carry the provenance so
+        # the baseline stays reviewable without rerunning the audit
+        for f in findings:
+            if f.severity == "error" and f.key not in notes:
+                notes[f.key] = (f"{f.detail}"
+                                + (f" [{f.provenance}]" if f.provenance
+                                   else ""))
         args.baseline.write_text(
-            json.dumps(baseline_payload(findings, notes), indent=2) + "\n")
+            json.dumps(baseline_payload(findings, notes, preserve),
+                       indent=2) + "\n")
         print(f"wrote {args.baseline}")
         return 0
 
     baseline = load_baseline(args.baseline) if args.baseline.exists() else {}
-    new, fixed = diff_baseline(findings, baseline)
+    new, fixed = diff_baseline(findings, baseline, mesh_scope,
+                               unmeshed_in_scope, scope_archs)
     for f in new:
         print(f"NEW finding (not in baseline): {f.key}")
     for k in fixed:
@@ -158,8 +254,12 @@ def main(argv=None) -> int:
     if new or fixed:
         print("analysis gate: FAIL")
         return 1
-    print(f"analysis gate: OK ({len(baseline)} baselined finding(s), "
-          f"{len(units)} unit(s))")
+    scope = sum(1 for k in baseline
+                if key_in_scope(k, mesh_scope, unmeshed_in_scope,
+                                scope_archs))
+    print(f"analysis gate: OK ({scope}/{len(baseline)} baselined "
+          f"finding(s) in scope, {len(units)} audit unit(s), "
+          f"{len(partition_units)} partition unit(s))")
     return 0
 
 

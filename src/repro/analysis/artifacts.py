@@ -24,7 +24,8 @@ from repro.analysis.jaxpr_walk import CLASS_BY_LEAF, Taint, WalkResult, \
     walk_jaxpr
 from repro.serve.telemetry import TrafficModel
 
-__all__ = ["Artifact", "AuditUnit", "unit_from_engine", "leaf_name"]
+__all__ = ["Artifact", "AuditUnit", "unit_from_engine", "leaf_name",
+           "sharded_leaf_factors"]
 
 
 def leaf_name(path) -> str:
@@ -83,6 +84,48 @@ class AuditUnit:
             if a.name == name:
                 return a
         return None
+
+
+def sharded_leaf_factors(args, shardings, roles) -> Tuple[Dict[str, int],
+                                                          List[str]]:
+    """Per-device split factor for every cache leaf class of an
+    artifact entry (``engine.lowered_artifacts()`` format).
+
+    For each cache-role argument, walks the (abstract value, sharding)
+    trees together and computes ``global_elements / shard_elements``
+    per leaf via ``sharding.shard_shape`` — the factor the partition
+    pass divides the global per-class byte bill by.  Returns
+    ``(factors, problems)`` where factors maps the jaxpr-walk leaf
+    class (``kv``/``kv_pool``/``state_pool``/``block``/...) to its
+    factor; leaves of one class disagreeing on a factor is a problem
+    (the bill would be ill-defined).
+    """
+    factors: Dict[str, int] = {}
+    problems: List[str] = []
+    for argnum, arg in enumerate(args):
+        if roles.get(argnum) != "cache":
+            continue
+        sh = shardings[argnum] if shardings is not None else None
+        if sh is None:
+            continue
+        leaves = jax.tree_util.tree_flatten_with_path(arg)[0]
+        sh_leaves = jax.tree_util.tree_leaves(sh)
+        for (path, leaf), s in zip(leaves, sh_leaves):
+            cls = CLASS_BY_LEAF.get(leaf_name(path))
+            if cls is None or not hasattr(s, "shard_shape"):
+                continue
+            shard = s.shard_shape(tuple(leaf.shape))
+            n_shard = 1
+            for d in shard:
+                n_shard *= int(d)
+            factor = max(1, int(leaf.size) // max(1, n_shard))
+            prev = factors.setdefault(cls, factor)
+            if prev != factor:
+                problems.append(
+                    f"leaf class {cls!r}: sharding factor {factor} at "
+                    f"{_path_str(path)} disagrees with {prev} on an "
+                    f"earlier leaf — per-class split is ill-defined")
+    return factors, problems
 
 
 def _seed_for(role: str, path, flat_index: int) -> Optional[Taint]:

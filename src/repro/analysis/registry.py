@@ -18,10 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import re
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 __all__ = ["Finding", "register_pass", "registered_passes", "run_passes",
-           "load_baseline", "diff_baseline", "BASELINE_SCHEMA"]
+           "load_baseline", "diff_baseline", "BASELINE_SCHEMA",
+           "key_mesh_size", "key_in_scope"]
 
 BASELINE_SCHEMA = "analysis-baseline-v1"
 
@@ -102,26 +104,81 @@ def load_baseline(path) -> Dict[str, str]:
     return out
 
 
-def diff_baseline(findings: Sequence[Finding], baseline: Dict[str, str]
+#: mesh-parameterized keys end ``@mesh=N`` — the partition pass emits
+#: one finding per audited mesh size, so a run that audited meshes
+#: {2, 8} can neither confirm nor refute a ``@mesh=512`` entry
+_MESH_SUFFIX_RE = re.compile(r"@mesh=(\d+)$")
+
+
+def key_mesh_size(key: str) -> Optional[int]:
+    """The mesh size a finding key is parameterized on (None if the
+    key is mesh-independent)."""
+    m = _MESH_SUFFIX_RE.search(key)
+    return int(m.group(1)) if m else None
+
+
+def key_in_scope(key: str, audited_meshes: Optional[Set[int]] = None,
+                 unmeshed_in_scope: bool = True,
+                 audited_archs: Optional[Sequence[str]] = None) -> bool:
+    """Whether this run could have produced the finding behind ``key``.
+
+    Only in-scope baseline entries can be declared stale: a
+    ``@mesh=N`` entry is in scope iff mesh N was audited AND the
+    finding's arch was in the partition matrix (subjects lead with
+    ``<arch>/<mode>``; ``audited_archs=None`` means the full default
+    matrix ran), and a mesh-independent entry iff the full
+    (non-partition-only) audit ran.
+    """
+    mesh = key_mesh_size(key)
+    if mesh is None:
+        return unmeshed_in_scope
+    if mesh not in (audited_meshes or ()):
+        return False
+    if audited_archs is None:
+        return True
+    subject = key.split(":", 2)[-1]
+    return any(subject.startswith(f"{arch}/") for arch in audited_archs)
+
+
+def diff_baseline(findings: Sequence[Finding], baseline: Dict[str, str],
+                  audited_meshes: Optional[Set[int]] = None,
+                  unmeshed_in_scope: bool = True,
+                  audited_archs: Optional[Sequence[str]] = None
                   ) -> Tuple[List[Finding], List[str]]:
     """Split error findings against the allowlist.
 
     Returns ``(new, fixed)``: findings whose key is absent from the
-    baseline (regressions), and baseline keys no run finding produced
-    (stale entries that must be deleted alongside their fix).  Either
-    being non-empty fails the gate.
+    baseline (regressions), and *in-scope* baseline keys no run finding
+    produced (stale entries that must be deleted alongside their fix).
+    Either being non-empty fails the gate.  Baseline entries outside
+    this run's scope (``@mesh=N`` for an unaudited N, an arch outside
+    a ``--partition-archs`` restriction, or every mesh-independent key
+    under ``--partition-only``) are left alone — a partial audit must
+    not declare findings it never looked for to be fixed.
     """
     seen = {f.key for f in findings if f.severity == "error"}
     new = [f for f in findings
            if f.severity == "error" and f.key not in baseline]
-    fixed = sorted(k for k in baseline if k not in seen)
+    fixed = sorted(k for k in baseline if k not in seen
+                   and key_in_scope(k, audited_meshes, unmeshed_in_scope,
+                                    audited_archs))
     return new, fixed
 
 
 def baseline_payload(findings: Sequence[Finding],
-                     notes: Optional[Dict[str, str]] = None) -> dict:
-    """Serializable allowlist covering the given error findings."""
+                     notes: Optional[Dict[str, str]] = None,
+                     preserve: Optional[Dict[str, str]] = None) -> dict:
+    """Serializable allowlist covering the given error findings.
+
+    ``preserve`` carries existing entries outside the regenerating
+    run's scope (unaudited mesh sizes) forward verbatim — rewriting the
+    baseline at ``--mesh 2`` must not drop the ``@mesh=512`` family.
+    """
     notes = notes or {}
-    keys = sorted({f.key for f in findings if f.severity == "error"})
+    entries = dict(preserve or {})
+    for f in findings:
+        if f.severity == "error" and f.key not in entries:
+            entries[f.key] = notes.get(f.key, "")
     return {"schema": BASELINE_SCHEMA,
-            "findings": [{"key": k, "note": notes.get(k, "")} for k in keys]}
+            "findings": [{"key": k, "note": entries[k]}
+                         for k in sorted(entries)]}

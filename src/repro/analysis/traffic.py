@@ -32,12 +32,56 @@ from repro.analysis.artifacts import AuditUnit
 from repro.analysis.jaxpr_walk import CLASS_BY_LEAF, WRITE_BUCKET
 from repro.analysis.registry import Finding, register_pass
 
-__all__ = ["traffic_pass", "decode_traffic_report"]
+__all__ = ["traffic_pass", "decode_traffic_report", "split_per_device"]
 
 #: classes where the structural count must equal the analytic model
 GATED_CLASSES = ("kv_sweep_read", "kv_page_read", "kv_append_write",
                  "state_read", "state_write",
                  "gather_view_read", "gather_view_write")
+
+#: which cache leaf class backs each gated traffic class, per decode
+#: cache layout — paged engines bill pools, contiguous the [B, L] cache
+#: (gather-view traffic is derived from pool pages, so it splits with
+#: the pool's factor)
+_SPLIT_LEAF = {
+    "contiguous": {"kv_sweep_read": "kv", "kv_page_read": "kv",
+                   "kv_append_write": "kv", "gather_view_read": "kv",
+                   "gather_view_write": "kv",
+                   "state_read": "state", "state_write": "state"},
+    "paged": {"kv_sweep_read": "kv_pool", "kv_page_read": "kv_pool",
+              "kv_append_write": "kv_pool", "gather_view_read": "kv_pool",
+              "gather_view_write": "kv_pool",
+              "state_read": "state_pool", "state_write": "state_pool"},
+}
+
+
+def split_per_device(expected, leaf_factors, mode):
+    """Split a global per-class decode bill by cache sharding factors.
+
+    ``expected`` is ``TrafficModel.static_decode_classes`` output;
+    ``leaf_factors`` maps cache leaf classes to their per-device split
+    factor (``analysis.artifacts.sharded_leaf_factors``).  Returns
+    ``(per_device, problems)``: per-device bytes for every gated class
+    (exact integer division — a class whose global bytes the factor
+    does not divide is a problem, because the 'per-device share' would
+    be a fiction) plus any indivisibility problems found.
+    """
+    leaf_for = _SPLIT_LEAF["contiguous" if mode == "contiguous"
+                           else "paged"]
+    per_device = {}
+    problems = []
+    for cls in GATED_CLASSES:
+        total = int(expected.get(cls, 0))
+        if total == 0:
+            per_device[cls] = 0
+            continue
+        factor = int(leaf_factors.get(leaf_for[cls], 1))
+        if total % factor:
+            problems.append(
+                f"{cls}: global {total} bytes/step not divisible by the "
+                f"{leaf_for[cls]!r} sharding factor {factor}")
+        per_device[cls] = total // factor
+    return per_device, problems
 
 
 def decode_traffic_report(unit: AuditUnit) -> dict:

@@ -11,12 +11,52 @@ import dataclasses
 from typing import Optional, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["ShardingPolicy", "param_specs", "batch_specs"]
+__all__ = ["ShardingPolicy", "param_specs", "batch_specs",
+           "as_concrete_mesh"]
 
 Axes = Union[None, str, Tuple[str, ...]]
+
+
+def _mesh_axis_sizes(mesh) -> Tuple[Tuple[str, int], ...]:
+    """(axis, size) pairs for a ``Mesh`` OR an ``AbstractMesh`` — the
+    abstract form has no device array, only ``shape_tuple``."""
+    shape_tuple = getattr(mesh, "shape_tuple", None)
+    if shape_tuple is not None:
+        return tuple((str(a), int(s)) for a, s in shape_tuple)
+    return tuple(zip((str(a) for a in mesh.axis_names),
+                     (int(s) for s in mesh.devices.shape)))
+
+
+def as_concrete_mesh(mesh, devices=None) -> Mesh:
+    """Bind an ``AbstractMesh`` description to this process's devices.
+
+    This jax version cannot lower a computation whose shardings name an
+    ``AbstractMesh`` (its ``_device_assignment`` is unimplemented), so
+    dry-run partitioning binds the abstract description to compile-only
+    devices — typically host CPU devices forced into existence with
+    ``--xla_force_host_platform_device_count=N`` *before* jax
+    initializes (``python -m repro.analysis --mesh N`` does this).
+    A concrete ``Mesh`` passes through untouched.
+    """
+    if isinstance(mesh, Mesh):
+        return mesh
+    items = _mesh_axis_sizes(mesh)
+    n = 1
+    for _, s in items:
+        n *= s
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"cannot bind abstract mesh {dict(items)} ({n} devices) to "
+            f"{len(devices)} available device(s); force host devices "
+            f"before jax initializes, e.g. XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    arr = np.array(devices[:n]).reshape([s for _, s in items])
+    return Mesh(arr, tuple(a for a, _ in items))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,11 +84,14 @@ class ShardingPolicy:
     fsdp_min_size: int = 1 << 20
 
     @classmethod
-    def for_mesh(cls, mesh: Mesh, *, seq_axis: Axes = None,
+    def for_mesh(cls, mesh, *, seq_axis: Axes = None,
                  fsdp: bool = False, zero1: bool = False,
                  **overrides) -> "ShardingPolicy":
-        names = tuple(mesh.axis_names)
-        sizes = tuple(zip(names, (int(s) for s in mesh.devices.shape)))
+        """Policy for a ``Mesh`` or an ``AbstractMesh`` — the policy
+        only consumes axis names and extents, so an abstract mesh
+        description (no devices) decides placement identically."""
+        sizes = _mesh_axis_sizes(mesh)
+        names = tuple(a for a, _ in sizes)
         data = tuple(a for a in names if a in ("pod", "data")) or names[:1]
         model = "model" if "model" in names else names[-1]
         return cls(mesh_axis_sizes=sizes, data_axes=data, model_axis=model,

@@ -245,13 +245,15 @@ class TransformerLM:
                      for kind in cfg.pattern_tail)
         return {"groups": tuple(groups), "tail": tail}
 
-    def _one_paged_cache(self, kind, batch, max_ctx, page_size, kv_pages, dt):
+    def _one_paged_cache(self, kind, batch, max_ctx, page_size, kv_pages, dt,
+                         state_pages=None):
         cfg = self.cfg
         if kind in ("global", "local"):
             return attn.init_paged_kv_cache(
                 cfg, batch, cfg.decode_cache_len(kind, max_ctx),
                 page_size, kv_pages, dt)
-        n_state = batch + attn.RESERVED_PAGES
+        n_state = (batch + attn.RESERVED_PAGES
+                   if state_pages is None else state_pages)
         if kind == "ssm":
             return ssm_mod.init_paged_ssm_cache(cfg, batch, n_state, dt)
         if kind == "rglru":
@@ -259,12 +261,14 @@ class TransformerLM:
         raise ValueError(kind)  # pragma: no cover
 
     def init_paged_cache(self, batch: int, max_ctx: int, page_size: int,
-                         kv_pages: int) -> dict:
+                         kv_pages: int, state_pages=None) -> dict:
         """Paged twin of :meth:`init_cache`: the same {'groups', 'tail'}
         structure, but each attention layer holds a ``kv_pages``-page
         pool (incl. the 2 reserved pages) behind a per-slot block table
         sized for ``max_ctx`` logical positions, and each recurrent
-        layer a ``batch``-deep state-page pool.  ``decode_step`` accepts
+        layer a ``state_pages``-deep state-page pool (default: one page
+        per slot plus the reserved pages; a larger extent buys the data
+        axes a divisible page dim to shard).  ``decode_step`` accepts
         either form unchanged; a fresh paged cache decodes bit-identically
         to a fresh ``init_cache(batch, max_ctx)`` once pages are assigned
         (see :class:`repro.serve.paging.PageTable`)."""
@@ -272,7 +276,7 @@ class TransformerLM:
         groups = []
         for kind in cfg.attn_pattern:
             c = self._one_paged_cache(kind, batch, max_ctx, page_size,
-                                      kv_pages, dt)
+                                      kv_pages, dt, state_pages)
             groups.append(
                 jax.tree.map(
                     lambda x: jnp.broadcast_to(
@@ -282,7 +286,7 @@ class TransformerLM:
                 )
             )
         tail = tuple(self._one_paged_cache(kind, batch, max_ctx, page_size,
-                                           kv_pages, dt)
+                                           kv_pages, dt, state_pages)
                      for kind in cfg.pattern_tail)
         return {"groups": tuple(groups), "tail": tail}
 

@@ -108,9 +108,16 @@ def cache_specs(model: TransformerLM, batch: int, cache_len: int,
         if name == "length":
             return P(*([None] * nd))
         if name in ("conv", "conv_p"):     # [(G,) B|n_sp, k-1, width]
-            return P(*lead, b if name == "conv" else None, None, m)
+            cb = b if name == "conv" \
+                else policy.page_spec(leaf.shape[len(lead)])
+            return P(*lead, cb, None, m)
         if name in ("h", "h_p"):
-            hb = b if name == "h" else None
+            # state pools take the page placement KV pools get: the
+            # page dim is the capacity dim, and leaving it replicated
+            # makes the per-device state bill grow with the mesh (the
+            # partition pass's invariance gate caught exactly this)
+            hb = b if name == "h" \
+                else policy.page_spec(leaf.shape[len(lead)])
             if nd == len(lead) + 3:        # ssm: [(G,) B|n_sp, di, n]
                 return P(*lead, hb, m, None)
             return P(*lead, hb, m)         # rglru: [(G,) B|n_sp, dl]
@@ -483,7 +490,8 @@ class ServeEngine:
         if self.paged is not None:
             self._table = PageTable(
                 model, self.max_batch, self.max_ctx, self.paged.page_size,
-                self.paged.resident_pages)
+                self.paged.resident_pages,
+                state_pages=self.paged.state_pages)
             self._decode, _, self._cache_sh = build_decode_step(
                 model, mesh, policy, batch=self.max_batch,
                 cache_len=self.max_ctx, per_slot_pos=True,
@@ -519,7 +527,9 @@ class ServeEngine:
         return self._table
 
     # ------------------------------------------------------- introspection
-    def lowered_artifacts(self) -> List[dict]:
+    def lowered_artifacts(self, mesh=None,
+                          policy: Optional[ShardingPolicy] = None
+                          ) -> List[dict]:
         """The engine's lowered executables, packaged for static analysis.
 
         Returns one entry per executable the serve loop dispatches —
@@ -532,7 +542,44 @@ class ServeEngine:
         ``ShapeDtypeStruct``): ``repro.analysis`` traces and lowers
         these without executing anything, so an engine constructed with
         abstract params works.  The serve loop itself never calls this.
+
+        ``mesh`` (optionally with ``policy``) rebuilds the step
+        functions bound to a *target* mesh — concrete or a
+        ``jax.sharding.AbstractMesh`` description — with the engine's
+        geometry (batch, context, page budget) unchanged and the
+        engine's own executables untouched.  An abstract mesh is bound
+        to compile-only host devices via
+        :func:`repro.dist.sharding.as_concrete_mesh` (this jax cannot
+        lower on an abstract mesh directly); the partitioning pass in
+        ``repro.analysis.partition`` uses this to dry-run GSPMD at
+        8/64/512 devices on hardware that can execute on at most two.
         """
+        if mesh is None and policy is None:
+            decode_fn, prefill_fn = self._decode, self._prefill
+            insert_fn, cache_sh = self._insert, self._cache_sh
+        else:
+            from repro.dist.sharding import as_concrete_mesh
+            target = mesh if mesh is not None else self.mesh
+            lower_mesh = as_concrete_mesh(target)
+            pol = policy if policy is not None \
+                else ShardingPolicy.for_mesh(target)
+            prefill_fn = build_prefill_step(
+                self.model, lower_mesh, pol, cache_len=self.max_ctx,
+                batch=1)[0]
+            if self._table is not None:
+                decode_fn, _, cache_sh = build_decode_step(
+                    self.model, lower_mesh, pol, batch=self.max_batch,
+                    cache_len=self.max_ctx, per_slot_pos=True,
+                    cache_factory=self._table.init_cache,
+                    decode_backend=self.decode_backend)
+                insert_fn = None
+            else:
+                decode_fn, _, cache_sh = build_decode_step(
+                    self.model, lower_mesh, pol, batch=self.max_batch,
+                    cache_len=self.max_len, per_slot_pos=True)
+                insert_fn = jax.jit(self._insert_cache,
+                                    out_shardings=cache_sh,
+                                    donate_argnums=(0,))
         aparams = jax.eval_shape(
             lambda: self.model.init(jax.random.key(0)))
         B = self.max_batch
@@ -544,26 +591,26 @@ class ServeEngine:
         tok = jax.ShapeDtypeStruct((B,), jnp.int32)
         pos = jax.ShapeDtypeStruct((B,), jnp.int32)
         arts = [dict(
-            name="decode", fn=self._decode, args=(aparams, cache, tok, pos),
+            name="decode", fn=decode_fn, args=(aparams, cache, tok, pos),
             roles={0: "params", 1: "cache"},
             expect_donate_argnums=(1,),
-            shardings=(None, self._cache_sh, None, None))]
+            shardings=(None, cache_sh, None, None))]
         top = self.buckets.ladder[-1]
         arts.append(dict(
-            name="prefill", fn=self._prefill,
+            name="prefill", fn=prefill_fn,
             args=(aparams, jax.ShapeDtypeStruct((1, top), jnp.int32),
                   jax.ShapeDtypeStruct((1,), jnp.int32)),
             roles={0: "params"}, expect_donate_argnums=(),
             shardings=None))
-        if self._insert is not None:
+        if insert_fn is not None:
             one = jax.eval_shape(
                 lambda: self.model.init_cache(1, self.max_ctx))
             arts.append(dict(
-                name="insert", fn=self._insert,
+                name="insert", fn=insert_fn,
                 args=(cache, one, jax.ShapeDtypeStruct((), jnp.int32)),
                 roles={0: "cache"},
                 expect_donate_argnums=(0,),
-                shardings=(self._cache_sh, None, None)))
+                shardings=(cache_sh, None, None)))
         return arts
 
     @property

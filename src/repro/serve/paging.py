@@ -84,6 +84,16 @@ class PagedCacheConfig:
                           ``max_len``: decode keeps appending pages past
                           the prefill cap, which is how requests outgrow
                           the old contiguous per-slot allocation.
+    ``state_pages``     — pool extent per recurrent *state* stream,
+                          including the reserved pages (``None`` =
+                          ``max_batch + RESERVED_PAGES``, the minimum
+                          that can hold every slot).  State pools shard
+                          their page dim across the data axes exactly
+                          like KV pools, but only when the extent
+                          divides the axis — on a mesh, size this like
+                          ``resident_pages`` (a per-device share times
+                          the device count) or the pool replicates and
+                          the per-device state bill grows with the mesh.
 
     Field-local constraints are checked at construction; the
     cross-field budget floor (``resident_pages`` must hold one fully
@@ -96,6 +106,7 @@ class PagedCacheConfig:
     page_size: int = 16
     resident_pages: Optional[int] = None
     max_ctx: Optional[int] = None
+    state_pages: Optional[int] = None
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -107,6 +118,11 @@ class PagedCacheConfig:
                 f"PagedCacheConfig.resident_pages must be >= 1 when set "
                 f"(device page budget per KV stream), got "
                 f"{self.resident_pages}")
+        if self.state_pages is not None and self.state_pages < 1:
+            raise ValueError(
+                f"PagedCacheConfig.state_pages must be >= 1 when set "
+                f"(state-stream pool extent incl. reserved pages), got "
+                f"{self.state_pages}")
         if self.max_ctx is not None and self.max_ctx < 1:
             raise ValueError(
                 f"PagedCacheConfig.max_ctx must be >= 1 when set "
@@ -185,7 +201,7 @@ class PageTable:
 
     def __init__(self, model: TransformerLM, max_batch: int, max_ctx: int,
                  page_size: int, resident_pages: Optional[int] = None,
-                 cache_shardings=None):
+                 cache_shardings=None, state_pages: Optional[int] = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.model = model
@@ -209,6 +225,17 @@ class PageTable:
         self.resident_pages = int(resident_pages)
         self.n_pages = self.resident_pages + RESERVED_PAGES
 
+        state_floor = self.max_batch + RESERVED_PAGES
+        if state_pages is None:
+            state_pages = state_floor
+        if state_pages < state_floor:
+            raise ValueError(
+                f"state_pages={state_pages} cannot hold every slot's "
+                f"recurrent state: max_batch={self.max_batch} slots need "
+                f"{state_floor} pages (one each plus {RESERVED_PAGES} "
+                f"reserved)")
+        self.state_pages = int(state_pages)
+
         for where, kind in self._positions():
             if kind in ("global", "local"):
                 L = self.cfg.decode_cache_len(kind, self.max_ctx)
@@ -217,7 +244,7 @@ class PageTable:
                     self.n_pages))
             else:
                 self.streams.append(_Stream(
-                    where, kind, None, 1, self.max_batch + RESERVED_PAGES))
+                    where, kind, None, 1, self.state_pages))
 
         self.bind_shardings(cache_shardings)
 
@@ -274,7 +301,8 @@ class PageTable:
 
     def init_cache(self):
         return self.model.init_paged_cache(
-            self.max_batch, self.max_ctx, self.page_size, self.n_pages)
+            self.max_batch, self.max_ctx, self.page_size, self.n_pages,
+            state_pages=self.state_pages)
 
     # -------------------------------------------------------------- sizing
     def kv_pages_for(self, tokens: int, stream: _Stream) -> int:

@@ -15,13 +15,25 @@ Three layers, cheapest first:
   nothing executes) across archs x decode backends must derive byte
   counts equal to ``TrafficModel.static_decode_classes`` class for
   class, and produce zero error findings on a solo topology.
+* **HLO collective goldens** (PR 7) — hand-written partitioned-HLO
+  lines, one per collective kind plus the iota/explicit/empty
+  replica-group forms, async start/done pairs and layout-paren
+  operands, pinning the parser's exact per-device wire-byte arithmetic
+  and the tensor-family classification the locality lint gates on.
+* **Partition gates** (PR 7) — mesh-scoped baseline accounting
+  (``@mesh=N`` keys), the per-device bill splitter, and the invariance
+  gate on synthetic units; the real 2-vs-8-vs-64 cross-check lowers
+  engines in a subprocess (forced device count) under ``slow_serve``.
 
 The 2-device GSPMD-gather detection lives in
 ``test_serve_multidevice.py`` (it needs a forced device count before
 jax initializes, hence a subprocess).
 """
 import json
+import os
 import pathlib
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -31,17 +43,23 @@ from jax.experimental import enable_x64
 from jax.sharding import PartitionSpec
 
 from repro.analysis import decode_traffic_report, unit_from_engine
-from repro.analysis.artifacts import Artifact, AuditUnit
+from repro.analysis.artifacts import (Artifact, AuditUnit,
+                                      sharded_leaf_factors)
 from repro.analysis.costs import (KernelCost, lookup_pallas_cost,
                                   register_pallas_cost, uniform_cost)
+from repro.analysis.hlo_walk import (classify_collective, ledger_rows,
+                                     parse_collectives)
 from repro.analysis.jaxpr_walk import (PallasSite, Taint, TRAFFIC_CLASSES,
                                        WalkResult, walk_jaxpr)
 from repro.analysis.lints import hygiene_pass, sharding_pass
+from repro.analysis.partition import PartitionUnit, invariance_findings
 from repro.analysis.registry import (BASELINE_SCHEMA, Finding,
                                      baseline_payload, diff_baseline,
+                                     key_in_scope, key_mesh_size,
                                      load_baseline, registered_passes,
                                      run_passes)
-from repro.analysis.traffic import GATED_CLASSES, traffic_pass
+from repro.analysis.traffic import (GATED_CLASSES, split_per_device,
+                                    traffic_pass)
 from repro.configs import get_config
 from repro.models.transformer import TransformerLM
 from repro.serve import PagedCacheConfig, ServeEngine, TrafficModel
@@ -271,11 +289,22 @@ def test_diff_baseline_gates_new_and_stale_not_info():
     assert baseline_payload([info])["findings"] == []
 
 
-def test_checked_in_baseline_has_only_the_known_gspmd_gather():
+def test_checked_in_baseline_is_the_known_collective_families():
+    # the allowlist may contain exactly two things: the single PR 6
+    # GSPMD-gather finding and the mesh-parameterized pool-collective
+    # family it generalizes to (PR 7) — anything else is a regression
+    # someone baselined instead of fixing
     data = json.loads(BASELINE.read_text())
     assert data["schema"] == BASELINE_SCHEMA
-    assert [e["key"] for e in data["findings"]] == [GSPMD_KEY]
-    assert load_baseline(BASELINE)[GSPMD_KEY]      # note explains the gap
+    keys = [e["key"] for e in data["findings"]]
+    assert GSPMD_KEY in keys
+    family = [k for k in keys if k != GSPMD_KEY]
+    assert family, "partition pool-collective family missing"
+    assert all(k.startswith("partition:pool-collective:") for k in family)
+    # the family is audited at every acceptance mesh size
+    assert {key_mesh_size(k) for k in family} == {2, 8, 64, 512}
+    notes = load_baseline(BASELINE)
+    assert all(notes[k] for k in keys)     # every entry carries provenance
 
 
 # ------------------------------------------------- engine-level cross-checks
@@ -305,3 +334,295 @@ def test_static_audit_matches_telemetry_exactly(arch, mode):
     # solo topology: no pass may produce an error finding
     errors = [f for f in run_passes([unit]) if f.severity == "error"]
     assert errors == [], [f.key for f in errors]
+
+
+# ------------------------------------------------------ HLO collective goldens
+_META = ('metadata={op_name="%s" source_file="%s" source_line=%d}')
+
+
+def _one(line, n_devices=None):
+    (c,) = parse_collectives(line, n_devices=n_devices)
+    return c
+
+
+def test_all_gather_explicit_groups_and_ring_bytes():
+    c = _one(
+        '  %all-gather.1 = f32[8,16]{1,0} all-gather(f32[2,16]{1,0} %p.0), '
+        'channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, '
+        'use_global_device_ids=true, '
+        + _META % ("jit(decode)/jit(main)/while/body/gather",
+                   "/repo/src/repro/models/attention.py", 336))
+    assert (c.kind, c.n_groups, c.group_size) == ("all-gather", 2, 4)
+    assert c.result_bytes == 8 * 16 * 4 and c.operand_bytes == 2 * 16 * 4
+    # ring all-gather: each device wires out*(g-1)/g bytes
+    assert c.wire_bytes_per_device() == 8 * 16 * 4 * 3 // 4
+    assert c.source_file.endswith("attention.py") and c.source_line == 336
+    assert classify_collective(c, "gather") == "kv_pool"
+    assert classify_collective(c, "contiguous") == "kv"
+
+
+def test_all_reduce_iota_groups_and_state_classification():
+    c = _one(
+        '  %all-reduce.2 = f32[4,4]{1,0} all-reduce(f32[4,4]{1,0} %x), '
+        'channel_id=2, replica_groups=[2,4]<=[4,2]T(1,0), to_apply=%add, '
+        + _META % ("jit(decode)/jit(main)/while/body/gather",
+                   "/repo/src/repro/models/rglru.py", 151))
+    assert (c.kind, c.n_groups, c.group_size) == ("all-reduce", 2, 4)
+    # ring all-reduce = reduce-scatter + all-gather: 2*in*(g-1)/g
+    assert c.wire_bytes_per_device() == 2 * (4 * 4 * 4) * 3 // 4
+    assert classify_collective(c, "pallas_paged") == "state_pool"
+    assert classify_collective(c, "contiguous") == "state"
+
+
+def test_reduce_scatter_metadata_less_float_is_activation():
+    c = _one(
+        '  %reduce-scatter.3 = f32[1,16]{1,0} reduce-scatter('
+        'f32[8,16]{1,0} %y), replica_groups={{0,1,2,3,4,5,6,7}}, '
+        'dimensions={0}, to_apply=%add')
+    assert (c.kind, c.group_size) == ("reduce-scatter", 8)
+    assert c.wire_bytes_per_device() == 8 * 16 * 4 * 7 // 8
+    # a GSPMD reshard of an unnamed intermediate: never 'other' (which
+    # would be an error finding), never silently a pool class
+    assert classify_collective(c, "gather") == "activation"
+
+
+def test_all_to_all_integer_payload_is_meta():
+    c = _one(
+        '  %all-to-all.4 = s32[4]{0} all-to-all(s32[4]{0} %idx), '
+        'replica_groups={{0,1},{2,3}}, dimensions={0}, '
+        + _META % ("jit(decode)/jit(main)/while/body/all_to_all",
+                   "/repo/src/repro/models/attention.py", 100))
+    assert (c.kind, c.n_groups, c.group_size) == ("all-to-all", 2, 2)
+    assert c.wire_bytes_per_device() == 4 * 4 * 1 // 2
+    # integer payload = block-table/length indirection, even at a KV site
+    assert classify_collective(c, "gather") == "meta"
+
+
+def test_collective_permute_wires_full_operand():
+    c = _one(
+        '  %collective-permute.5 = f32[2,8]{1,0} collective-permute('
+        'f32[2,8]{1,0} %w), channel_id=5, source_target_pairs={{0,1},{1,0}}, '
+        + _META % ("jit(prefill)/while/body/slice",
+                   "/repo/src/repro/models/layers.py", 40))
+    assert c.kind == "collective-permute"
+    # point-to-point: the whole shard moves, group arithmetic is moot
+    assert c.wire_bytes_per_device() == 2 * 8 * 4
+    assert classify_collective(c, "gather") == "params"
+
+
+def test_async_start_counts_once_done_is_skipped():
+    text = (
+        '  %all-gather-start.6 = (f32[2,4]{1,0}, f32[8,4]{1,0}) '
+        'all-gather-start(f32[2,4]{1,0} %z), replica_groups={{0,1,2,3}}, '
+        'dimensions={0}\n'
+        '  %all-gather-done.7 = f32[8,4]{1,0} all-gather-done('
+        '(f32[2,4]{1,0}, f32[8,4]{1,0}) %all-gather-start.6)\n')
+    (c,) = parse_collectives(text)
+    assert c.is_async and c.kind == "all-gather"
+    # async-start result tuple is (operand, gathered): bill the payload
+    assert c.result_bytes == 8 * 4 * 4
+    assert c.wire_bytes_per_device() == 8 * 4 * 4 * 3 // 4
+
+
+def test_empty_replica_groups_spans_all_devices_layout_parens_ok():
+    # layout annotations put parens inside the operand region — the
+    # depth scan must not cut the region short
+    c = _one(
+        '  %all-reduce.8 = f32[4]{0} all-reduce(f32[4]{0:T(4)} %f), '
+        'replica_groups={}, to_apply=%add', n_devices=16)
+    assert (c.n_groups, c.group_size) == (1, 16)
+    assert c.operand_bytes == 4 * 4
+    assert c.wire_bytes_per_device() == 2 * 16 * 15 // 16
+
+
+def test_pool_dims_fallback_pins_metadata_less_pool_moves():
+    c = _one('  %all-gather.9 = f32[40,8,2,4]{3,2,1,0} all-gather('
+             'f32[5,8,2,4]{3,2,1,0} %pool), replica_groups={{0,1,2,3,4,5,6,7}}, '
+             'dimensions={0}')
+    pool_dims = {(40, 8, 2, 4): "kv_pool", (5, 8, 2, 4): "kv_pool"}
+    # without the shape map this is just an unnamed float reshard...
+    assert classify_collective(c, "pallas_paged") == "activation"
+    # ...with it, a whole-pool materialization cannot hide
+    assert classify_collective(c, "pallas_paged", pool_dims) == "kv_pool"
+
+
+def test_transformer_cache_write_sites_classify_as_cache_not_params():
+    line = ('  %all-reduce.10 = f32[1,1,32,4,16]{4,3,2,1,0} all-reduce('
+            'f32[1,1,32,4,16]{4,3,2,1,0} %dus), replica_groups={{0,1}}, '
+            'to_apply=%add, '
+            + _META % ("jit(prefill)/jit(main)/while/body/"
+                       "dynamic_update_slice",
+                       "/repo/src/repro/models/transformer.py", 382))
+    c = _one(line)
+    assert classify_collective(c, "contiguous") == "kv"
+    # a non-cache-write transformer.py site stays params
+    c2 = _one(line.replace("dynamic_update_slice", "dot_general"))
+    assert classify_collective(c2, "contiguous") == "params"
+
+
+def test_paged_kernel_collectives_get_their_own_ledger_site():
+    text = (
+        '  %all-gather.11 = f32[40,8,2,4]{3,2,1,0} all-gather('
+        'f32[5,8,2,4]{3,2,1,0} %kp), replica_groups={{0,1,2,3,4,5,6,7}}, '
+        'dimensions={0}, '
+        + _META % ("jit(decode)/jit(paged_decode_attention)/while/body/"
+                   "dynamic_slice",
+                   "/repo/src/repro/kernels/paged_attention/kernel.py", 157)
+        + '\n'
+        '  %all-gather.12 = f32[40,8,2,4]{3,2,1,0} all-gather('
+        'f32[5,8,2,4]{3,2,1,0} %kp2), replica_groups={{0,1,2,3,4,5,6,7}}, '
+        'dimensions={0}, '
+        + _META % ("jit(decode)/jit(paged_decode_attention)/while/body/"
+                   "dynamic_slice",
+                   "/repo/src/repro/kernels/paged_attention/kernel.py", 157))
+    rows = ledger_rows(parse_collectives(text), "pallas_paged")
+    (row,) = rows
+    assert row["site"] == "kernels/paged_attention"
+    assert row["class"] == "kv_pool" and row["count"] == 2
+    per_op = 40 * 8 * 2 * 4 * 4 * 7 // 8
+    assert row["wire_bytes_per_device"] == 2 * per_op
+
+
+# ------------------------------------------------------------ partition gates
+def test_key_mesh_size_and_scope():
+    assert key_mesh_size("partition:pool-collective:x@mesh=512") == 512
+    assert key_mesh_size("sharding:gspmd:x") is None
+    assert key_mesh_size("pass:code:mesh=8") is None     # suffix only
+    # @mesh=N keys are scored iff N was audited
+    assert key_in_scope("p:c:x@mesh=8", {2, 8})
+    assert not key_in_scope("p:c:x@mesh=512", {2, 8})
+    # mesh-independent keys are scored unless the jaxpr matrix was skipped
+    assert key_in_scope("sharding:gspmd:x", {2, 8}, unmeshed_in_scope=True)
+    assert not key_in_scope("sharding:gspmd:x", {2}, unmeshed_in_scope=False)
+    # --partition-archs narrows meshed-key scope to the audited archs:
+    # subjects lead with "<arch>/<mode>", so a qwen-only run cannot
+    # declare another arch's @mesh=N entries stale
+    qwen = "partition:pool-collective:qwen1.5-0.5b/gather:x@mesh=8"
+    rg = "partition:pool-collective:recurrentgemma-2b/gather:x@mesh=8"
+    assert key_in_scope(qwen, {8}, audited_archs=("qwen1.5-0.5b",))
+    assert not key_in_scope(rg, {8}, audited_archs=("qwen1.5-0.5b",))
+    assert key_in_scope(rg, {8}, audited_archs=None)   # full matrix ran
+    # prefix match is on the full arch token, not a substring
+    assert not key_in_scope(
+        "partition:pool-collective:qwen1.5-0.5b-xl/gather:x@mesh=8",
+        {8}, audited_archs=("qwen1.5-0.5b",))
+
+
+def test_diff_baseline_leaves_out_of_scope_mesh_entries_alone():
+    base = {"partition:pool-collective:x@mesh=2": "n",
+            "partition:pool-collective:x@mesh=512": "n",
+            "sharding:gspmd:x": "n"}
+    at2 = Finding("partition", "pool-collective", "x@mesh=2", "d")
+    # a --mesh 2 partition-only run: the @mesh=512 entry is unaudited
+    # and the jaxpr matrix never ran — neither may be declared stale
+    new, fixed = diff_baseline([at2], base, audited_meshes={2},
+                               unmeshed_in_scope=False)
+    assert new == [] and fixed == []
+    # the full run with both sizes audited DOES retire fixed entries
+    new, fixed = diff_baseline([at2], base, audited_meshes={2, 512},
+                               unmeshed_in_scope=True)
+    assert new == []
+    assert fixed == ["partition:pool-collective:x@mesh=512",
+                     "sharding:gspmd:x"]
+
+
+def test_baseline_payload_preserves_out_of_scope_entries():
+    f = Finding("partition", "pool-collective", "x@mesh=2", "d")
+    payload = baseline_payload(
+        [f], notes={f.key: "fresh note"},
+        preserve={"partition:pool-collective:x@mesh=512": "kept verbatim"})
+    entries = {e["key"]: e["note"] for e in payload["findings"]}
+    assert entries == {"partition:pool-collective:x@mesh=2": "fresh note",
+                       "partition:pool-collective:x@mesh=512":
+                           "kept verbatim"}
+
+
+def test_split_per_device_divides_exactly_or_complains():
+    expected = {c: 0 for c in GATED_CLASSES}
+    expected.update(kv_sweep_read=800, kv_append_write=80, state_read=102)
+    per_dev, problems = split_per_device(
+        expected, {"kv": 8, "state": 4}, "contiguous")
+    assert per_dev["kv_sweep_read"] == 100
+    assert per_dev["kv_append_write"] == 10
+    assert problems == ["state_read: global 102 bytes/step not divisible "
+                        "by the 'state' sharding factor 4"]
+    # paged modes split by the pool leaf classes instead
+    per_dev, problems = split_per_device(
+        {**{c: 0 for c in GATED_CLASSES}, "gather_view_read": 64},
+        {"kv_pool": 8}, "pallas_paged")
+    assert per_dev["gather_view_read"] == 8 and problems == []
+
+
+def test_sharded_leaf_factors_from_entry_shardings():
+    class _Sh:                            # quacks like NamedSharding
+        def __init__(self, split):
+            self.split = split
+
+        def shard_shape(self, shape):
+            return (shape[0] // self.split,) + tuple(shape[1:])
+
+    args = ({"kp": jax.ShapeDtypeStruct((40, 8, 2, 4), jnp.float32),
+             "block": jax.ShapeDtypeStruct((8, 4), jnp.int32)},
+            jax.ShapeDtypeStruct((8,), jnp.int32))
+    shardings = ({"kp": _Sh(8), "block": _Sh(1)}, None)
+    factors, problems = sharded_leaf_factors(args, shardings, {0: "cache"})
+    assert factors == {"kv_pool": 8, "block": 1} and problems == []
+    # two leaves of one class disagreeing on the factor is ill-defined
+    args2 = ({"kp": jax.ShapeDtypeStruct((40, 2), jnp.float32),
+              "vp": jax.ShapeDtypeStruct((40, 2), jnp.float32)},)
+    _, problems = sharded_leaf_factors(
+        args2, ({"kp": _Sh(8), "vp": _Sh(4)},), {0: "cache"})
+    assert len(problems) == 1 and "kv_pool" in problems[0]
+
+
+def _punit(mesh_size, per_device, mode="pallas_paged"):
+    return PartitionUnit(
+        label=f"qwen1.5-0.5b/{mode}/mesh{mesh_size}",
+        cfg_name="qwen1.5-0.5b", mode=mode, mesh_size=mesh_size,
+        live=mesh_size, ctx=32, collectives={},
+        bill={"global": {}, "per_device": per_device, "leaf_factors": {}})
+
+
+def test_invariance_gate_flags_per_device_growth_only():
+    flat = {c: 0 for c in GATED_CLASSES}
+    flat.update(kv_sweep_read=128, state_read=32)
+    grown = dict(flat, state_read=256)    # state bill grew with the mesh
+    ok = invariance_findings([_punit(2, flat), _punit(8, flat),
+                              _punit(64, flat)])
+    assert ok == []
+    bad = invariance_findings([_punit(2, flat), _punit(8, grown)])
+    assert [f.code for f in bad] == ["per-device-variance"]
+    assert bad[0].subject == "qwen1.5-0.5b/pallas_paged:state_read@mesh=8"
+    assert bad[0].severity == "error"
+    # different (cfg, mode) pairs never compare against each other
+    assert invariance_findings(
+        [_punit(2, flat), _punit(8, grown, mode="gather")]) == []
+
+
+@pytest.mark.slow_serve
+def test_partition_bill_invariant_across_real_meshes(tmp_path):
+    """2-vs-8-vs-64 on real engine artifacts: lower the qwen matrix
+    under abstract meshes in a subprocess (forced device count) and
+    assert the per-device decode bill is identical at every size."""
+    out = tmp_path / "partition.json"
+    repo = pathlib.Path(__file__).parent.parent
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--mesh", "2", "--mesh",
+         "8", "--mesh", "64", "--partition-only", "--partition-archs",
+         "qwen1.5-0.5b", "--json", str(out)],
+        capture_output=True, text=True, env=env, cwd=repo)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    data = json.loads(out.read_text())
+    assert not [f for f in data["findings"]
+                if f["code"] == "per-device-variance"], proc.stdout
+    bills = {}
+    for label, u in data["partition"].items():
+        arch, mode, mesh = label.split("/")
+        bills.setdefault(mode, {})[int(mesh[len("mesh"):])] = \
+            u["bill"]["per_device"]
+    assert set(bills) == {"contiguous", "gather", "pallas_paged"}
+    for mode, by_mesh in bills.items():
+        assert set(by_mesh) == {2, 8, 64}
+        assert by_mesh[2] == by_mesh[8] == by_mesh[64], mode
+        assert any(by_mesh[2].values()), f"{mode}: empty per-device bill"
