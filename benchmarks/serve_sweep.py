@@ -22,25 +22,32 @@ timed, at full occupancy, next to the telemetry split — so the
 trajectory captures auditor/telemetry agreement (``static_match``)
 per arch and backend, not just throughput.
 
-v3 adds the mesh-scale story from the partitioning dry-run
-(``python -m repro.analysis --mesh 8 --partition-only``, one
-subprocess so the forced 8-device CPU topology never touches the timed
-engines): ``static_per_device_bytes`` is the decode step's per-device
-HBM bill under the weak-scaling audit geometry at 8 devices, and
-``collective_bytes`` the decode step's total cross-device wire bytes
-per device per step — both exact, both trajectory signals (the bill
-must track the v2 global bill / 8, and collective bytes must *drop*
-when ROADMAP item 3's shard_map kernel sharding lands).
+v4 lands ROADMAP item 3's device-local decode in the trajectory.  The
+script forces a 2-device host CPU topology before jax initializes, so
+next to the solo gather/pallas rows it times a real ``shard_map``
+engine (``shards=2``: slots and pool extents pinned per device, the
+kernel reading only its local pool) and asserts its generations match
+the solo rows bit-for-bit.  The partitioning dry-run
+(``python -m repro.analysis --mesh 8 --mesh 64 --mesh 512
+--partition-only``, one subprocess so the forced 512-device topology
+never touches the timed engines) becomes a per-row ``mesh_matrix``:
+for each audited mesh size, the decode step's per-device HBM bill
+under the weak-scaling audit geometry and its total cross-device wire
+bytes per device per step — both exact.  The per-device bill must be
+identical across the matrix (weak scaling), and with the device-local
+layout no pool byte moves cross-device at any size; the analysis CI
+gate owns those assertions, the bench keeps the trajectory.
 
 Schema (``BENCH_serve.json``)::
 
-    {"schema": "serve-decode-v3",
-     "rows": [{"arch", "batch", "backend", "decode_steps",
+    {"schema": "serve-decode-v4",
+     "rows": [{"arch", "batch", "backend", "shards", "decode_steps",
                "steps_per_sec", "tok_per_sec",
                "kv_read_bytes_per_step", "gather_bytes_per_step",
                "static_bytes_per_step", "static_classes",
-               "static_match", "page_size", "mesh_devices",
-               "static_per_device_bytes", "collective_bytes"}, ...]}
+               "static_match", "page_size",
+               "mesh_matrix": {"<N>": {"static_per_device_bytes",
+                                       "collective_bytes"}, ...}}, ...]}
 
     python benchmarks/serve_sweep.py [--archs all] [--out BENCH_serve.json]
 """
@@ -49,9 +56,18 @@ from __future__ import annotations
 if __package__ in (None, ""):
     import _bootstrap  # noqa: F401  (direct invocation: sys.path setup)
 
+import os
+
+# Two host CPU devices for the shard_map row — set before jax imports.
+# The solo rows are unaffected (their engines jit on device 0).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
 import argparse
 import json
-import os
 import subprocess
 import sys
 import tempfile
@@ -71,28 +87,35 @@ from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
 # --archs all covers the zoo.
 DEFAULT_ARCHS = ("qwen1.5-0.5b", "gemma2-9b", "recurrentgemma-2b")
 PROMPT_LENS = (4, 9, 6, 12)
-SERVE_CTX = 4096      # deployment context for the byte constants
-PARTITION_MESH = 8    # abstract mesh size for the per-device columns
+SERVE_CTX = 4096                  # deployment context, byte constants
+PARTITION_MESHES = (8, 64, 512)   # dry-run matrix for mesh_matrix
 
 
 def partition_dry_run(archs) -> dict:
-    """Per-device decode columns from the abstract-mesh dry-run.
+    """Per-device decode columns from the abstract-mesh dry-run matrix.
 
-    Runs ``python -m repro.analysis --mesh 8 --partition-only`` in a
-    subprocess (it must force 8 host CPU devices before jax initializes
-    — this process's timed engines stay on the default topology) and
-    reduces each partition unit to the two v3 columns.  Returns
-    ``{(arch, backend): {"static_per_device_bytes", "collective_bytes"}}``;
-    empty on failure (the columns then read ``None`` — the bench never
-    fails on the dry-run, the analysis CI gate owns that).
+    Runs ``python -m repro.analysis --mesh 8 --mesh 64 --mesh 512
+    --partition-only`` in a subprocess (it must force the host CPU
+    devices before jax initializes — this process's timed engines keep
+    their own 2-device topology) and reduces each partition unit to the
+    two per-device columns.  Returns ``{(arch, backend): {str(N):
+    {"static_per_device_bytes", "collective_bytes"}}}``; empty on
+    failure (the columns then read ``None`` — the bench never fails on
+    the dry-run itself, the analysis CI gate owns its findings).
     """
     with tempfile.TemporaryDirectory() as td:
         out = os.path.join(td, "partition.json")
-        proc = subprocess.run(
-            [sys.executable, "-m", "repro.analysis",
-             "--mesh", str(PARTITION_MESH), "--partition-only",
-             "--partition-archs", *archs, "--json", out],
-            capture_output=True, text=True)
+        cmd = [sys.executable, "-m", "repro.analysis", "--partition-only",
+               "--partition-archs", *archs, "--json", out]
+        for n in PARTITION_MESHES:
+            cmd += ["--mesh", str(n)]
+        # drop this process's forced 2-device flag so the subprocess can
+        # force the full matrix's device count itself
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = " ".join(
+            f for f in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in f)
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
         if not os.path.exists(out):
             print(f"partition dry-run produced no JSON "
                   f"(exit {proc.returncode}):\n{proc.stderr[-2000:]}",
@@ -101,8 +124,8 @@ def partition_dry_run(archs) -> dict:
         units = json.load(open(out)).get("partition", {})
     cols = {}
     for label, u in units.items():
-        arch, mode, _ = label.split("/")
-        cols[(arch, mode)] = {
+        arch, mode, meshN = label.split("/")
+        cols.setdefault((arch, mode), {})[meshN.removeprefix("mesh")] = {
             "static_per_device_bytes": sum(u["bill"]["per_device"].values()),
             "collective_bytes": sum(
                 row["wire_bytes_per_device"]
@@ -123,28 +146,49 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
                                        page_size=page_size)
     rows, outs = [], {}
     engine_len = 16 + new_tokens
-    for backend in ("gather", "pallas_paged"):
+    variants = [("gather", None), ("pallas_paged", None)]
+    if len(jax.devices()) >= 2:
+        # the shard_map row: slots and pool extents pinned per device on
+        # a (data=2, model=1) mesh; the engine auto-selects shards=2
+        # from the default (divisible) pool geometry
+        from jax.sharding import Mesh
+
+        from repro.dist.sharding import ShardingPolicy
+        mesh = Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                    ("data", "model"))
+        variants.append(("pallas_paged", mesh))
+    for backend, mesh in variants:
+        kw = {}
+        if mesh is not None:
+            kw = dict(mesh=mesh, policy=ShardingPolicy.for_mesh(mesh))
         engine = ServeEngine(
             model, params, max_len=engine_len, max_batch=max_batch,
             paged=PagedCacheConfig(page_size=page_size),
-            decode_backend=backend)
+            decode_backend=backend, **kw)
+        shards = engine._table.shards
+        if mesh is not None:
+            assert shards == 2, (
+                f"{arch}: mesh engine resolved shards={shards}, "
+                f"expected the device-local layout")
         # ctx_scale maps the smoke engine's occupancies onto SERVE_CTX
         # so the row-exact KV sweep and the (occupancy-independent)
         # gather view bytes describe the same deployment context.
         tele = ServeTelemetry(traffic, ctx_scale=SERVE_CTX / engine_len)
         # warm the executables so steps/sec measures the loop, not tracing
         engine.serve([prompts[0]], 2, seed=1)
-        outs[backend] = engine.serve(prompts, new_tokens, seed=7,
-                                     telemetry=tele)
+        outs[(backend, shards)] = engine.serve(prompts, new_tokens, seed=7,
+                                               telemetry=tele)
         n = max(tele.decode_steps, 1)
         # static audit of the exact decode executable this sweep timed
         # (smoke scale, full occupancy) — the agreement bit is the
-        # trajectory signal that accounting has not drifted
+        # trajectory signal that accounting has not drifted, and on the
+        # shard_map row that per-shard bytes x shards bills exactly
         audit = decode_traffic_report(unit_from_engine(engine, arch))
         rows.append({
             "arch": arch,
             "batch": max_batch,
             "backend": backend,
+            "shards": shards,
             "decode_steps": tele.decode_steps,
             "steps_per_sec": (tele.decode_steps / tele.decode_time_s
                               if tele.decode_time_s > 0 else 0.0),
@@ -159,10 +203,14 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
             "static_match": bool(audit["match"]),
             "page_size": page_size,
         })
-    for i, (a, b) in enumerate(zip(outs["gather"], outs["pallas_paged"])):
-        np.testing.assert_array_equal(
-            a, b, err_msg=f"{arch} request {i}: kernel generations "
-                          f"diverged from gather")
+    ref = outs[("gather", 1)]
+    for key, got in outs.items():
+        if key == ("gather", 1):
+            continue
+        for i, (a, b) in enumerate(zip(ref, got)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{arch} request {i}: {key} generations "
+                              f"diverged from gather")
     return rows
 
 
@@ -185,26 +233,29 @@ def main():
                                args.page_size))
     per_device = partition_dry_run(archs)
     for r in rows:
-        cols = per_device.get((r["arch"], r["backend"]), {})
-        r["mesh_devices"] = PARTITION_MESH if cols else None
-        r["static_per_device_bytes"] = cols.get("static_per_device_bytes")
-        r["collective_bytes"] = cols.get("collective_bytes")
+        matrix = per_device.get((r["arch"], r["backend"]))
+        r["mesh_matrix"] = matrix if matrix else None
     for r in rows:
         us = 1e6 / r["steps_per_sec"] if r["steps_per_sec"] else 0.0
-        emit(f"serve_decode_{r['arch']}_{r['backend']}", us,
+        m8 = (r["mesh_matrix"] or {}).get("8") or {}
+        emit(f"serve_decode_{r['arch']}_{r['backend']}"
+             + (f"_sm{r['shards']}" if r["shards"] > 1 else ""), us,
              f"steps/s={r['steps_per_sec']:.2f} "
              f"kv_read/step={r['kv_read_bytes_per_step']} "
              f"gather/step={r['gather_bytes_per_step']} "
              f"static/step={r['static_bytes_per_step']} "
-             f"perdev@{PARTITION_MESH}={r['static_per_device_bytes']} "
-             f"collective/dev={r['collective_bytes']} "
+             f"perdev@8={m8.get('static_per_device_bytes')} "
+             f"collective/dev@8={m8.get('collective_bytes')} "
              f"audit={'ok' if r['static_match'] else 'DRIFT'}")
     if not all(r["static_match"] for r in rows):
         raise SystemExit("static audit disagrees with telemetry — "
                          "run python -m repro.analysis for the class diff")
+    if not any(r["shards"] > 1 for r in rows):
+        raise SystemExit("no shard_map row was swept — the forced "
+                         "2-device topology did not take effect")
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
-        json.dump({"schema": "serve-decode-v3", "rows": rows}, f, indent=1)
+        json.dump({"schema": "serve-decode-v4", "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)")
 
 

@@ -48,8 +48,10 @@ finding, which is what keeps cost handlers from drifting from their
 kernels (the kernels CI job runs ``--check-baseline``).
 
 **Lints** (:mod:`.lints`).  Sharding: detects GSPMD all-gathers forced
-around the opaque paged-attention kernel on a mesh (the known ROADMAP
-item 3 gap — baselined) and pool page dims that lost their sharding.
+around the opaque paged-attention kernel on a mesh and pool page dims
+that lost their sharding.  Pallas sites inside a ``shard_map`` body are
+marked ``manual`` by the walker and exempt — their operands are
+already device-local — so any *new* unmapped occurrence fails CI.
 Hygiene: f64/weak-type promotion, closure-captured constants > 1 MiB,
 host-sync callbacks, and cache arguments whose lowered executables do
 not donate them (an un-donated cache is a full copy per step that the
@@ -75,17 +77,26 @@ the cache shardings, asserted mesh-size-invariant class-for-class — the
 audit geometry weak-scales at one slot + five pool pages per device, so
 any per-device growth is a locality regression), and the **page-pool
 locality lint** (``partition:pool-collective:...@mesh=N`` error
-findings for every collective moving ``kv_pool``/``state_pool`` pages —
-the mesh-parameterized family generalizing the single PR 6 GSPMD-gather
-baseline, which landing native ``shard_map`` kernel sharding must drain
-from ``baseline.json``).  Invariance is the acceptance proxy for
-ROADMAP item 3: it is exactly the property the shard_map rewrite must
-preserve while emptying the collective family.
+findings for every collective moving ``kv_pool``/``state_pool`` pages).
+PR 8's device-local ``shard_map`` decode drained that family entirely:
+``baseline.json`` is empty, so a pool byte moving cross-device at any
+audited mesh size fails the gate outright, and the per-device HBM bill
+is asserted mesh-size-invariant with the audit geometry weak-scaling
+at one slot + four resident pages per device.
+
+**shard_map rule** (:mod:`.jaxpr_walk`).  The walker descends into
+``shard_map`` equations with the body's *per-shard* avals and
+multiplies its bills by the shard count (mesh axes not in ``auto``),
+so per-shard bytes x N equals the exact global bill for the gated
+traffic classes; contained Pallas sites are marked ``manual`` for the
+sharding lint.
 
 **Baseline policy** (:mod:`.registry`, ``baseline.json``).  Error
-findings diff against the checked-in allowlist: a finding not in the
-baseline fails (regression), and a baseline entry no longer produced
-also fails (the fix must shrink the baseline in the same change).
+findings diff against the checked-in allowlist (empty since PR 8): a
+finding not in the baseline fails (regression), and a baseline entry
+no longer produced also fails (the fix must shrink the baseline in the
+same change — the PR 8 drain deleted all 48 pool-collective entries
+plus the PR 6 GSPMD-gather entry this way).
 ``info`` findings never gate.  Mesh-parameterized keys (``...@mesh=N``)
 are only scored when mesh N was audited — a ``--mesh 2`` run can
 neither confirm nor retire the ``@mesh=512`` family, and

@@ -120,12 +120,16 @@ class Taint:
 class PallasSite:
     """One pallas_call encountered during the walk (for the sharding
     lint and for reporting): where it is, how often the enclosing loops
-    run it, and what flows into each operand."""
+    run it, and what flows into each operand.  ``manual``: the call
+    sits inside a ``shard_map`` region — its operands are already
+    device-local shards, GSPMD never gathers or re-shards them, so the
+    gspmd-gather sharding lint does not apply."""
 
     name_and_src: str
     multiplier: int
     operand_taints: Tuple[Optional[Taint], ...]
     operand_shapes: Tuple[Tuple[int, ...], ...]
+    manual: bool = False
 
 
 @dataclasses.dataclass
@@ -223,6 +227,10 @@ class _Walker:
             self._scan(eqn, env, mult)
             return
 
+        if prim == "shard_map":
+            self._shard_map(eqn, env, mult)
+            return
+
         if prim == "cond":
             self._cond(eqn, env, mult)
             return
@@ -317,6 +325,38 @@ class _Walker:
         # carries map through; ys keep the body outvar's taint — the
         # stack-back is free under the loop-aliasing assumption the
         # donation lint guards.
+        for outer, var in zip(eqn.outvars, inner.outvars):
+            t = self._get(body_env, var)
+            if t is not None:
+                env[outer] = t
+
+    def _shard_map(self, eqn, env: Dict, mult: int) -> None:
+        """Manual-mesh (shard_map) region: walk the body once on its
+        per-shard avals and multiply by the shard count (mesh axes not
+        in ``auto``), so per-shard bytes x shards == the exact global
+        bill for evenly split operands — pools, block tables, tokens —
+        which are the gated classes.  Replicated operands (params) bill
+        their per-device copy x shards, the true all-device HBM figure
+        (``param_*`` is derived-only, never gated).  Taints map through
+        invars/outvars exactly like a pjit call, so pool in-place chains
+        survive the region; pallas sites inside are flagged ``manual``
+        for the sharding lint."""
+        p = eqn.params
+        inner = p["jaxpr"]               # an open Jaxpr, not a ClosedJaxpr
+        auto = p.get("auto") or frozenset()
+        shards = 1
+        for name, size in dict(p["mesh"].shape).items():
+            if name not in auto:
+                shards *= int(size)
+        body_env: Dict = {}
+        for var, v in zip(inner.invars, eqn.invars):
+            t = self._get(env, v)
+            if t is not None:
+                body_env[var] = t
+        n0 = len(self.sites)
+        self.walk(inner, body_env, mult * shards)
+        for i in range(n0, len(self.sites)):
+            self.sites[i] = dataclasses.replace(self.sites[i], manual=True)
         for outer, var in zip(eqn.outvars, inner.outvars):
             t = self._get(body_env, var)
             if t is not None:

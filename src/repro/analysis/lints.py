@@ -6,9 +6,12 @@ Sharding (decode step only, meaningful on >1-device meshes):
   operand that structurally descends from a *sharded* input.  The call
   is opaque to GSPMD, which must all-gather the operand onto every
   device before the kernel and re-shard after — per-step collective
-  traffic the byte model does not include.  This is ROADMAP item 3's
-  known gap for the paged-attention kernel and lives in the baseline
-  until the kernel goes natively SPMD; any *new* occurrence fails CI.
+  traffic the byte model does not include.  Calls inside a
+  ``shard_map`` region (``PallasSite.manual``) are exempt: their
+  operands arrive as device-local shards by construction and GSPMD
+  never re-shards them — that is exactly how the paged decode step
+  closed this gap (ROADMAP item 3); any *new* unmapped occurrence
+  fails CI.
 * ``pool-page-dim-unsharded`` — a KV pool leaf whose page dim divides
   the data-axis extent is nevertheless replicated in the lowered
   signature.  The paged cache's whole point on a mesh is that pool
@@ -108,6 +111,8 @@ def sharding_pass(unit: AuditUnit) -> List[Finding]:
 
     res = art.walk()
     for site in res.pallas_sites:
+        if site.manual:
+            continue      # shard_map body: operands are already local
         offending = []
         for i, taint in enumerate(site.operand_taints):
             if taint is not None and taint.src is not None \

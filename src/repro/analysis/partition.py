@@ -27,14 +27,15 @@ Three machine checks come out of each unit:
   (:func:`repro.analysis.traffic.split_per_device`), which
   :func:`invariance_findings` asserts is mesh-size-invariant
   class-for-class across every audited mesh (the audit geometry weak-
-  scales: one slot and five pool pages per device, so the per-device
-  split must not move);
+  scales: one slot, six KV pages and three state pages per device, so
+  the per-device split must not move);
 * a **locality lint** — any collective moving a page-pool class
   (``kv_pool``/``state_pool``) is an error finding keyed
-  ``partition:pool-collective:...@mesh=N``, generalizing PR 6's single
-  baselined GSPMD-gather into a mesh-parameterized family that landing
-  native ``shard_map`` kernel sharding must drain from
-  ``baseline.json``.
+  ``partition:pool-collective:...@mesh=N``.  The device-local
+  ``shard_map`` decode layout (``PagedCacheConfig.shards``;
+  :func:`repro.serve.engine.build_decode_step`) drained the whole
+  mesh-parameterized family from ``baseline.json``, so any occurrence
+  now fails the gate outright.
 """
 from __future__ import annotations
 
@@ -54,15 +55,16 @@ __all__ = ["PartitionUnit", "abstract_mesh", "partition_unit",
 
 # Weak-scaling audit geometry: per-device shares are constant, so the
 # per-device bill is the invariant under mesh growth.  One decode slot,
-# five KV pool pages, and two state pages per device (every pool page
-# dim is a multiple of N, so it is always divisible by the data axis
-# and ``ShardingPolicy.page_spec`` shards it at every audited size —
-# the default state extent N+2 would stop dividing past mesh 2),
-# page_size 8, context 32 = 4 pages per slot — a full mesh leaves 5N-2
-# resident KV pages for 4N live ones and 2N-2 state pages for N slots.
+# six KV pool pages, and three state pages per device, in the
+# device-local layout (``PagedCacheConfig.shards = N``): every device
+# owns its own reserved ZERO/DUMP pair plus exactly the resident pages
+# of its slot, so both pool page dims are N-divisible AND each shard
+# clears the per-shard slot floor — page_size 8, context 32 = 4 pages
+# per slot leaves each device 4 resident KV pages (= the floor) and
+# 1 state slot behind its 2 reserved state pages.
 SLOTS_PER_DEVICE = 1
-PAGES_PER_DEVICE = 5
-STATE_PAGES_PER_DEVICE = 2
+PAGES_PER_DEVICE = 6
+STATE_PAGES_PER_DEVICE = 3
 PAGE_SIZE = 8
 MAX_LEN = 32
 
@@ -170,13 +172,15 @@ def partition_unit(model, params, cfg_name: str, mode: str,
 
     paged = None
     if mode != "contiguous":
-        # n_pages = resident + RESERVED lands on exactly PAGES_PER_DEVICE
-        # * n, so the pool page dim is always data-axis divisible and
-        # ShardingPolicy.page_spec shards it at every audited mesh size
+        # Device-local layout: n_pages = resident + n * RESERVED lands on
+        # exactly PAGES_PER_DEVICE * n, so the pool page dim is data-axis
+        # divisible (page_spec shards it) and the shard_map decode step
+        # addresses only the local extent at every audited mesh size.
         paged = PagedCacheConfig(
             page_size=PAGE_SIZE,
-            resident_pages=PAGES_PER_DEVICE * n - RESERVED_PAGES,
-            state_pages=STATE_PAGES_PER_DEVICE * n)
+            resident_pages=(PAGES_PER_DEVICE - RESERVED_PAGES) * n,
+            state_pages=STATE_PAGES_PER_DEVICE * n,
+            shards=n)
     eng = ServeEngine(model, params, max_len=MAX_LEN,
                       max_batch=SLOTS_PER_DEVICE * n,
                       paged=paged,

@@ -149,6 +149,43 @@ class ShardingPolicy:
             return self.batch_spec
         return None
 
+    def slot_spec(self, n_slots: int) -> Axes:
+        """PartitionSpec entry for the *slot* dimension of a paged-cache
+        block table (``[n_slots, ...]``).
+
+        Block tables ride the data axes with their slots: under the
+        device-local decode layout (:func:`page_spec` pools +
+        ``shard_map`` in :func:`repro.serve.engine.build_decode_step`)
+        each device holds exactly the table rows of the slots pinned to
+        its pool extent, so the decode step needs no block-table
+        collective either.  Same divisibility rule as :func:`page_spec`:
+        indivisible slot counts replicate, which always lowers.
+        """
+        dsize = self.data_size
+        if dsize and dsize > 1 and n_slots % dsize == 0:
+            return self.batch_spec
+        return None
+
+    def decode_shards(self, max_batch: int, resident_pages: Optional[int],
+                      state_pages: Optional[int]) -> int:
+        """Number of device-local pool extents a paged serve cache should
+        be built with on this policy's mesh: the data-axis extent when
+        slots and both pool sizes split evenly across it (the
+        ``shard_map`` decode layout), else 1 (single-pool layout — the
+        decode step then falls back to GSPMD, which lowers everywhere
+        but gathers the pools).  ``None`` pool sizes are engine defaults
+        sized per-slot, hence always divisible when ``max_batch`` is."""
+        dsize = self.data_size
+        if not dsize or dsize <= 1:
+            return 1
+        if max_batch % dsize:
+            return 1
+        if resident_pages is not None and resident_pages % dsize:
+            return 1
+        if state_pages is not None and state_pages % dsize:
+            return 1
+        return dsize
+
 
 def _key(entry) -> str:
     """Stringify one pytree path entry (DictKey/SequenceKey/GetAttrKey)."""

@@ -62,4 +62,27 @@ Engine-side selection: ``ServeEngine(decode_backend="pallas_paged")``
 all 10 archs (interpret-mode parity is accumulation-order tolerant on
 logits, bit-exact on sampled tokens — pinned in
 ``tests/test_paged_attention_kernel.py``).
+
+Device-local decode under ``shard_map`` (PR 8)
+----------------------------------------------
+On a mesh, GSPMD cannot see through the block-table indirection: any
+page of the shared pool might serve any slot, so partitioning the
+unmapped kernel forces all-gathers of the *whole pool* every step —
+the ``pool-collective`` finding family the static auditor used to
+baseline.  The fix is layout, not kernel code: the kernel itself stays
+mesh-oblivious (one slot+head's page walk never crosses a slot
+boundary), and the serving layer makes locality true by construction.
+:class:`~repro.serve.paging.PageTable` pins slots to data-axis shards
+and carves the pool into per-shard extents (``shards`` contiguous
+ranges of pages, each with its own free list and reserved zero/dump
+pages), so a slot's block table only ever names pages in its own
+shard's extent.  ``ServeEngine`` then wraps the decode step in
+:func:`jax.shard_map` with the pool, block tables, and slot axes
+sharded over ``data``: each device runs the unchanged kernel over its
+local pool extent (block ids rebased by the shard's page offset
+in-body), and the only cross-device traffic left is the per-step token
+exchange.  Generations are bit-identical to the solo engine — pinned
+across forced preemption/offload in ``tests/test_serve_multidevice.py``
+— and the auditor's partition gate now runs against an *empty*
+baseline at every mesh size.
 """

@@ -6,6 +6,18 @@ dense-softmax jnp oracle.  The model layer
 (``repro.models.attention.attn_decode``) calls this op when the serving
 engine selects ``decode_backend="pallas_paged"``; the oracle is the
 parity anchor for the kernel test sweep.
+
+Mesh locality: the kernel itself is mesh-oblivious — it indexes whatever
+pool it is handed via the block table.  On multi-device meshes the
+serving engine wraps the decode step in ``shard_map``
+(:func:`repro.serve.engine.build_decode_step`): each device's program
+receives its *local* pool extent plus the block-table rows of the slots
+pinned to that shard, with global page ids rebased to local ones by
+partition-id arithmetic before the call.  The kernel therefore never
+causes a GSPMD gather, and :func:`_pallas_cost` — which prices a launch
+from its operand avals — automatically bills the per-shard shapes that
+the analysis walker multiplies by the shard count for the exact global
+HBM figure.
 """
 from __future__ import annotations
 

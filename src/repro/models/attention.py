@@ -218,9 +218,38 @@ def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCach
 #            slots point here so their decode writes land harmlessly
 #            outside every live slot's pages.  Its content is garbage and
 #            is only ever read by dead rows, whose outputs are ignored.
+#
+# On a data-parallel mesh the pool is built as ``shards`` equal extents,
+# one per data shard, and EVERY shard carries its own ZERO/DUMP pair at
+# the front of its extent (global ids ``g*ext + ZERO_PAGE`` /
+# ``g*ext + DUMP_PAGE``): a device-local decode step must never reach a
+# reserved page on another device.  ``shards == 1`` is exactly the old
+# single-pool layout.
 ZERO_PAGE = 0
 DUMP_PAGE = 1
 RESERVED_PAGES = 2
+
+
+def shard_of_slot(batch: int, shards: int):
+    """Data-axis shard owning each batch slot: slots are pinned in
+    contiguous blocks (``slot // (batch/shards)``), matching how a
+    ``P(data)`` layout splits the slot dim.  Returns [batch] int32."""
+    if shards < 1 or batch % shards:
+        raise ValueError(
+            f"paged cache: batch {batch} must be a positive multiple of "
+            f"shards {shards} (slots are pinned to data shards)")
+    return jnp.arange(batch, dtype=jnp.int32) // (batch // shards)
+
+
+def _shard_dump_ids(batch: int, n_pages: int, shards: int):
+    """Per-slot DUMP page id ([batch] int32): the DUMP page of the
+    shard-local pool extent the slot is pinned to."""
+    if n_pages % shards:
+        raise ValueError(
+            f"paged cache: pool extent {n_pages} must divide into "
+            f"shards {shards} equal per-device extents")
+    ext = n_pages // shards
+    return shard_of_slot(batch, shards) * ext + DUMP_PAGE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,15 +286,20 @@ def n_logical_pages(cache_len: int, page_size: int) -> int:
 
 
 def init_paged_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
-                        page_size: int, n_pages: int, dtype) -> PagedKVCache:
-    """Fresh pool of ``n_pages`` (incl. the 2 reserved) + all-DUMP block
-    tables: every slot is dead until the page table assigns pages."""
+                        page_size: int, n_pages: int, dtype,
+                        shards: int = 1) -> PagedKVCache:
+    """Fresh pool of ``n_pages`` (incl. the reserved pages of each of the
+    ``shards`` per-device extents) + all-DUMP block tables: every slot is
+    dead until the page table assigns pages.  Dead slots dump into the
+    DUMP page of *their own shard's* extent so a device-local decode
+    never writes across the data axis (``shards == 1``: plain DUMP)."""
     kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     n_lp = n_logical_pages(cache_len, page_size)
     shape = (n_pages, page_size, kvh, hd)
+    dump = _shard_dump_ids(batch, n_pages, shards)
     return PagedKVCache(
         kp=jnp.zeros(shape, dtype), vp=jnp.zeros(shape, dtype),
-        block=jnp.full((batch, n_lp), DUMP_PAGE, jnp.int32),
+        block=jnp.broadcast_to(dump[:, None], (batch, n_lp)),
         length=jnp.zeros((), jnp.int32),
         page_size=page_size, cache_len=cache_len)
 

@@ -133,13 +133,13 @@ jax.tree_util.register_dataclass(
 
 
 def init_paged_rglru_cache(cfg: ModelConfig, batch: int, n_pages: int,
-                           dtype) -> PagedRGLRUCache:
-    from repro.models.attention import DUMP_PAGE
+                           dtype, shards: int = 1) -> PagedRGLRUCache:
+    from repro.models.attention import _shard_dump_ids
     dl = cfg.resolved_lru_width
     return PagedRGLRUCache(
         conv_p=jnp.zeros((n_pages, cfg.conv1d_width - 1, dl), dtype),
         h_p=jnp.zeros((n_pages, dl), jnp.float32),
-        block=jnp.full((batch,), DUMP_PAGE, jnp.int32),
+        block=_shard_dump_ids(batch, n_pages, shards),
     )
 
 

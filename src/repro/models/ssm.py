@@ -217,13 +217,13 @@ jax.tree_util.register_dataclass(
 
 
 def init_paged_ssm_cache(cfg: ModelConfig, batch: int, n_pages: int,
-                         dtype) -> PagedSSMCache:
-    from repro.models.attention import DUMP_PAGE
+                         dtype, shards: int = 1) -> PagedSSMCache:
+    from repro.models.attention import _shard_dump_ids
     di = cfg.d_inner
     return PagedSSMCache(
         conv_p=jnp.zeros((n_pages, cfg.ssm_conv - 1, di), dtype),
         h_p=jnp.zeros((n_pages, di, cfg.ssm_state), jnp.float32),
-        block=jnp.full((batch,), DUMP_PAGE, jnp.int32),
+        block=_shard_dump_ids(batch, n_pages, shards),
     )
 
 

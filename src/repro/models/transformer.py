@@ -246,37 +246,45 @@ class TransformerLM:
         return {"groups": tuple(groups), "tail": tail}
 
     def _one_paged_cache(self, kind, batch, max_ctx, page_size, kv_pages, dt,
-                         state_pages=None):
+                         state_pages=None, shards=1):
         cfg = self.cfg
         if kind in ("global", "local"):
             return attn.init_paged_kv_cache(
                 cfg, batch, cfg.decode_cache_len(kind, max_ctx),
-                page_size, kv_pages, dt)
-        n_state = (batch + attn.RESERVED_PAGES
+                page_size, kv_pages, dt, shards=shards)
+        n_state = (batch + shards * attn.RESERVED_PAGES
                    if state_pages is None else state_pages)
         if kind == "ssm":
-            return ssm_mod.init_paged_ssm_cache(cfg, batch, n_state, dt)
+            return ssm_mod.init_paged_ssm_cache(cfg, batch, n_state, dt,
+                                                shards=shards)
         if kind == "rglru":
-            return rglru_mod.init_paged_rglru_cache(cfg, batch, n_state, dt)
+            return rglru_mod.init_paged_rglru_cache(cfg, batch, n_state, dt,
+                                                    shards=shards)
         raise ValueError(kind)  # pragma: no cover
 
     def init_paged_cache(self, batch: int, max_ctx: int, page_size: int,
-                         kv_pages: int, state_pages=None) -> dict:
+                         kv_pages: int, state_pages=None,
+                         shards: int = 1) -> dict:
         """Paged twin of :meth:`init_cache`: the same {'groups', 'tail'}
         structure, but each attention layer holds a ``kv_pages``-page
-        pool (incl. the 2 reserved pages) behind a per-slot block table
+        pool (incl. the reserved pages) behind a per-slot block table
         sized for ``max_ctx`` logical positions, and each recurrent
         layer a ``state_pages``-deep state-page pool (default: one page
         per slot plus the reserved pages; a larger extent buys the data
-        axes a divisible page dim to shard).  ``decode_step`` accepts
-        either form unchanged; a fresh paged cache decodes bit-identically
-        to a fresh ``init_cache(batch, max_ctx)`` once pages are assigned
+        axes a divisible page dim to shard).  ``shards`` splits every
+        pool into that many equal per-device extents, each with its own
+        reserved ZERO/DUMP pair, and pins slot ``s`` (its dead-slot DUMP
+        target) to extent ``s // (batch/shards)`` — the layout
+        :func:`repro.serve.engine.build_decode_step` maps device-locally
+        under ``shard_map``.  ``decode_step`` accepts either form
+        unchanged; a fresh paged cache decodes bit-identically to a
+        fresh ``init_cache(batch, max_ctx)`` once pages are assigned
         (see :class:`repro.serve.paging.PageTable`)."""
         cfg, dt = self.cfg, _dtype(self.cfg)
         groups = []
         for kind in cfg.attn_pattern:
             c = self._one_paged_cache(kind, batch, max_ctx, page_size,
-                                      kv_pages, dt, state_pages)
+                                      kv_pages, dt, state_pages, shards)
             groups.append(
                 jax.tree.map(
                     lambda x: jnp.broadcast_to(
@@ -286,7 +294,7 @@ class TransformerLM:
                 )
             )
         tail = tuple(self._one_paged_cache(kind, batch, max_ctx, page_size,
-                                           kv_pages, dt, state_pages)
+                                           kv_pages, dt, state_pages, shards)
                      for kind in cfg.pattern_tail)
         return {"groups": tuple(groups), "tail": tail}
 

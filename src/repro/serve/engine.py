@@ -38,9 +38,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist.axisenv import axis_env
 from repro.dist.sharding import ShardingPolicy, param_specs
+from repro.models.attention import RESERVED_PAGES, PagedKVCache
 from repro.models.config import ModelConfig
+from repro.models.rglru import PagedRGLRUCache
+from repro.models.ssm import PagedSSMCache
 from repro.models.transformer import TransformerLM
-from repro.serve.paging import PagedCacheConfig, PageTable
+from repro.serve.paging import PagedCacheConfig, PageTable, slot_floor
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
            "PrefillBuckets", "Request", "ServeEngine"]
@@ -62,8 +65,12 @@ def cache_specs(model: TransformerLM, batch: int, cache_len: int,
     pools, ``block`` tables): pools have no batch dim, so the *page*
     dim takes the data axes instead (``ShardingPolicy.page_spec`` —
     only when provably divisible), heads/state channels keep the model
-    axis, and block tables replicate (they are tiny int32 indirection
-    state every device needs to resolve its gathers).
+    axis, and block tables shard their *slot* dim over the data axes
+    (``ShardingPolicy.slot_spec``): under the device-local page layout
+    each device holds exactly the table rows of the slots pinned to its
+    pool extent, which is what lets the ``shard_map`` decode step read
+    pools with no collective at all (indivisible slot counts
+    replicate, which always lowers).
     """
     cfg = model.cfg
     b = policy.batch_spec if batch > 1 else None
@@ -104,7 +111,13 @@ def cache_specs(model: TransformerLM, batch: int, cache_len: int,
                 return P(*lead, pd, None, m, None)
             return P(*lead, pd, None, None, None)
         if name == "block":
-            return P(*([None] * nd))
+            # [(G,) B(, n_lp)] — slot dim rides the data axes with the
+            # pool extents; no sharding along kv_seq_axis (the seq-split
+            # layout keeps tables replicated for the length gather).
+            sd = None if kv_seq_axis is not None \
+                else policy.slot_spec(leaf.shape[len(lead)])
+            rest = [None] * (nd - len(lead) - 1)
+            return P(*lead, sd, *rest)
         if name == "length":
             return P(*([None] * nd))
         if name in ("conv", "conv_p"):     # [(G,) B|n_sp, k-1, width]
@@ -178,11 +191,32 @@ def build_prefill_step(model: TransformerLM, mesh: Mesh,
     return jax.jit(prefill, in_shardings=(psh, tok_sh)), psh, tok_sh
 
 
+def _is_paged_node(x) -> bool:
+    return isinstance(x, (PagedKVCache, PagedSSMCache, PagedRGLRUCache))
+
+
+def _shift_block_ids(cache, shift):
+    """Add ``shift * local_pool_extent`` to every paged node's block
+    table (``shift`` may be a traced scalar).  Inside a ``shard_map``
+    body the pool leaves are already device-local, so each node's own
+    page-dim extent *is* the per-shard extent — ``-shard_index``
+    rebases global page ids to local pool offsets, ``+shard_index``
+    restores them."""
+    def one(node):
+        if isinstance(node, PagedKVCache):
+            ext = node.kp.shape[node.kp.ndim - 4]   # [(G,) n_pages, P, kvh, hd]
+            return dataclasses.replace(node, block=node.block + shift * ext)
+        ext = node.conv_p.shape[node.conv_p.ndim - 3]  # [(G,) n_sp, k-1, d]
+        return dataclasses.replace(node, block=node.block + shift * ext)
+
+    return jax.tree.map(one, cache, is_leaf=_is_paged_node)
+
+
 def build_decode_step(model: TransformerLM, mesh: Mesh,
                       policy: ShardingPolicy, batch: int, cache_len: int,
                       kv_seq_axis=None, per_slot_pos: bool = False,
                       cache_factory=None, decode_backend: str = "gather",
-                      donate_cache: bool = True):
+                      donate_cache: bool = True, shards: int = 1):
     """One-token decode with sharded KV cache. Returns
     (step_fn, param_shardings, cache_shardings).
 
@@ -210,6 +244,23 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
     un-donated cache is a copy the traffic cross-check would miss.
     Disable only to lower a step whose caller must keep the input cache
     alive (e.g. checkpoint-restore debugging).
+
+    ``shards``: number of device-local pool extents the paged cache
+    geometry was built with (:class:`repro.serve.paging.PageTable`).
+    When it matches the mesh's data extent (and every non-data axis has
+    size 1, no ``kv_seq_axis``), the step is built as a **shard_map**
+    computation: each device rebases its (global-id) block-table rows
+    into its local pool extent, runs the full decode — including the
+    opaque Pallas paged-attention kernel — strictly device-locally, and
+    restores global ids on the way out; the replicated cache ``length``
+    is recomputed globally outside the mapped region with the exact
+    per-backend formula (``min(max(pos)+1, cache_len)``), so
+    generations are bit-identical to the solo/GSPMD step.  No
+    collective with a pool operand is lowered at any mesh size — the
+    property ``repro.analysis`` gates.  On any mismatch the builder
+    falls back to the plain GSPMD step, which is always correct (the
+    global-id layout decodes unmapped as-is) but gathers the pools
+    around the kernel.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     pspecs = param_specs(jax.eval_shape(
@@ -237,8 +288,74 @@ def build_decode_step(model: TransformerLM, mesh: Mesh,
             return model.decode_step(params, cache, token, pos,
                                      decode_backend=decode_backend)
 
+    data_size = 1
+    for a in policy.data_axes:
+        data_size *= sizes.get(a, 1)
+    use_shard_map = (
+        cache_factory is not None and shards > 1 and kv_seq_axis is None
+        and data_size == shards
+        # FSDP/ZeRO scatter params over the data axes; under a manual
+        # map nothing re-gathers them, so the body would compute on
+        # weight shards — GSPMD fallback stays correct there.
+        and not policy.fsdp and not policy.zero1
+        and all(s == 1 for a, s in sizes.items()
+                if a not in policy.data_axes))
+    if use_shard_map:
+        from jax.experimental.shard_map import shard_map
+
+        bspec = policy.batch_spec
+        logit_spec = P(bspec, None)
+
+        def body(params, cache, token, pos):
+            # flat data-shard index, from static axis sizes (partition-id
+            # arithmetic only — no collective may appear in this body)
+            g = jnp.int32(0)
+            for a in policy.data_axes:
+                g = g * sizes.get(a, 1) + jax.lax.axis_index(a)
+            local = _shift_block_ids(cache, -g)
+            # mesh=None env: `constrain` is the identity — the body is
+            # already device-local, GSPMD has nothing to place.
+            with axis_env(batch_axes=None, model_axis=None, seq_axis=None,
+                          mesh=None):
+                logits, new_cache = model.decode_step(
+                    params, local, token, pos,
+                    decode_backend=decode_backend)
+            new_cache = _shift_block_ids(new_cache, g)
+            # `length` is replicated (out_spec P()): pass the incoming
+            # replicated value through; the wrapper below recomputes it
+            # from the *global* position vector, exactly as the unmapped
+            # step does — per-device lengths would diverge.
+            new_cache = jax.tree.map(
+                lambda new, old: (dataclasses.replace(new, length=old.length)
+                                  if isinstance(new, PagedKVCache) else new),
+                new_cache, cache, is_leaf=_is_paged_node)
+            return logits, new_cache
+
+        smap = shard_map(
+            body, mesh=mesh,
+            in_specs=(pspecs, cspecs, P(bspec),
+                      P(bspec) if per_slot_pos else P()),
+            out_specs=(logit_spec, cspecs),
+            check_rep=False)
+
+        def decode_sm(params, cache, token, pos):
+            logits, new_cache = smap(params, cache, token, pos)
+            new_cache = jax.tree.map(
+                lambda new: (dataclasses.replace(
+                    new, length=jnp.broadcast_to(
+                        jnp.minimum(jnp.max(pos) + 1,
+                                    new.cache_len).astype(jnp.int32),
+                        new.length.shape))
+                    if isinstance(new, PagedKVCache) else new),
+                new_cache, is_leaf=_is_paged_node)
+            return logits, new_cache
+
+        fn = decode_sm
+    else:
+        fn = decode
+
     step = jax.jit(
-        decode,
+        fn,
         in_shardings=(psh, csh, tok_sh, pos_sh),
         out_shardings=(NamedSharding(mesh, P(
             policy.batch_spec if batch > 1 else None, None)), csh),
@@ -488,15 +605,16 @@ class ServeEngine:
         self._prefill = build_prefill_step(
             model, mesh, policy, cache_len=self.max_ctx, batch=1)[0]
         if self.paged is not None:
+            shards = self._resolve_shards()
             self._table = PageTable(
                 model, self.max_batch, self.max_ctx, self.paged.page_size,
                 self.paged.resident_pages,
-                state_pages=self.paged.state_pages)
+                state_pages=self.paged.state_pages, shards=shards)
             self._decode, _, self._cache_sh = build_decode_step(
                 model, mesh, policy, batch=self.max_batch,
                 cache_len=self.max_ctx, per_slot_pos=True,
                 cache_factory=self._table.init_cache,
-                decode_backend=self.decode_backend)
+                decode_backend=self.decode_backend, shards=shards)
             self._table.bind_shardings(self._cache_sh)
             self._insert = None
         else:
@@ -518,6 +636,29 @@ class ServeEngine:
             lambda base, r, i: jax.random.fold_in(jax.random.fold_in(base, r), i),
             in_axes=(None, 0, 0)))
         self._sample = jax.jit(self._sample_fn, static_argnums=(4,))
+
+    def _resolve_shards(self) -> int:
+        """Device-local pool extents for the paged cache geometry.
+
+        An explicit ``PagedCacheConfig.shards`` wins (the partitioning
+        auditor builds mesh-shaped geometry on a compile-only solo
+        mesh); otherwise auto-resolve to the mesh's data extent when
+        slots and pool budgets split evenly *and* every per-shard
+        extent still holds one fully decoded slot — else stay at 1
+        (single-pool geometry + GSPMD decode, correct everywhere)."""
+        cfgp = self.paged
+        if cfgp.shards > 1:
+            return cfgp.shards
+        shards = self.policy.decode_shards(
+            self.max_batch, cfgp.resident_pages, cfgp.state_pages)
+        if shards > 1 and cfgp.resident_pages is not None:
+            floor = slot_floor(self.model.cfg, self.max_ctx, cfgp.page_size)
+            if cfgp.resident_pages // shards < floor:
+                return 1
+        if shards > 1 and cfgp.state_pages is not None:
+            if cfgp.state_pages < self.max_batch + shards * RESERVED_PAGES:
+                return 1
+        return shards
 
     @property
     def page_table(self) -> Optional[PageTable]:
@@ -571,7 +712,8 @@ class ServeEngine:
                     self.model, lower_mesh, pol, batch=self.max_batch,
                     cache_len=self.max_ctx, per_slot_pos=True,
                     cache_factory=self._table.init_cache,
-                    decode_backend=self.decode_backend)
+                    decode_backend=self.decode_backend,
+                    shards=self._table.shards)
                 insert_fn = None
             else:
                 decode_fn, _, cache_sh = build_decode_step(
@@ -748,9 +890,17 @@ class ServeEngine:
         vocab = self.model.cfg.vocab_size
         temps = self._per_request(temperature, len(prompts), "temperature")
         top_ks = self._per_request(top_k, len(prompts), "top_k")
-        for tk in top_ks:
+        for i, (t, tk) in enumerate(zip(temps, top_ks)):
             if tk is not None and tk < 1:
-                raise ValueError(f"top_k must be >= 1, got {tk}")
+                raise ValueError(
+                    f"top_k must be >= 1, got {tk} (request {i})")
+            # a negative temperature flips the softmax ordering and NaN
+            # poisons every draw — reject with the request named, same
+            # as the top_k check, instead of sampling garbage silently.
+            if t is not None and (not np.isfinite(float(t)) or float(t) < 0):
+                raise ValueError(
+                    f"temperature must be finite and >= 0, got {t} "
+                    f"(request {i})")
         requests = [Request(i, self._admit_prompt(p, i), max_new_tokens,
                             temperature=float(t),
                             top_k=vocab if tk is None else int(tk))
@@ -819,7 +969,9 @@ class ServeEngine:
             runs dry, preempt the NEWEST live request — including the
             grower itself, which then suspends and waits FIFO — so the
             oldest admitted request is only ever victimized by its own
-            elders (FCFS progress is preserved)."""
+            elders (FCFS progress is preserved).  Pages are
+            shard-local, so only slots pinned to the grower's shard can
+            free the pages it needs — victims come from that shard."""
             nonlocal cache
             order = sorted((s for s in range(B) if slots[s] is not None),
                            key=lambda s: slots[s].req.req_id)
@@ -831,13 +983,16 @@ class ServeEngine:
                         cache, s, int(pos_vec[s]))
                     if ok:
                         break
-                    victims = [v for v in range(B) if slots[v] is not None]
+                    g = self._table.shard_of(s)
+                    victims = [v for v in range(B) if slots[v] is not None
+                               and self._table.shard_of(v) == g]
                     victim = max(victims, key=lambda v: slots[v].req.req_id)
                     if victim == s and len(victims) == 1:
                         raise RuntimeError(   # pragma: no cover
                             "paged cache: resident-page budget exhausted "
-                            "with a single live slot — unreachable when "
-                            "resident_pages covers one full slot")
+                            "with a single live slot in its shard — "
+                            "unreachable when every per-shard extent "
+                            "covers one full slot")
                     suspend(victim)
 
         def admit():
@@ -850,7 +1005,7 @@ class ServeEngine:
                         # pages (live slots will retire) rather than
                         # admitting page-hungry new requests around it.
                         sp = suspended[0]
-                        if not self._table.can_restore(sp.payload):
+                        if not self._table.can_restore(sp.payload, s):
                             break
                         suspended.popleft()
                         cache = self._table.restore(cache, s, sp.payload)
@@ -862,7 +1017,7 @@ class ServeEngine:
                         continue
                     req = pending[0]
                     plen = req.prompt.shape[0]
-                    if paged and not self._table.can_admit(plen):
+                    if paged and not self._table.can_admit(plen, s):
                         break                # wait for pages to free
                     pending.popleft()
                     bucket = self.buckets.bucket_for(plen)

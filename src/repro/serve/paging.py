@@ -27,12 +27,26 @@ architectures serve through the same allocator:
   engine accounts both directions as page-in/page-out traffic
   (:mod:`repro.serve.telemetry`).
 
-Per-stream pool capacity is ``resident_pages`` + the 2 reserved pages
+Per-stream pool capacity is ``resident_pages`` + the reserved pages
 (ZERO, DUMP — :mod:`repro.models.attention`).  ``resident_pages`` must
 cover one fully decoded slot (``max(n_logical_pages)`` over streams):
 with that floor, preempting down to a single live slot always frees
 enough pages, so the engine can guarantee forward progress under any
 budget it accepts.
+
+**Device-local layout (``shards > 1``).**  On a data-parallel mesh the
+allocator splits every pool into ``shards`` equal extents — one per
+data shard, each fronted by its own ZERO/DUMP pair — and pins batch
+slot ``s`` to extent ``s // (max_batch/shards)``, exactly the rows a
+``P(data)`` slot layout places on that device.  Allocation then runs a
+*per-(stream, shard)* free list: a slot only ever receives pages from
+its own extent, so the ``shard_map`` decode step
+(:func:`repro.serve.engine.build_decode_step`) reads and writes pool
+pages strictly device-locally and no collective with a pool operand is
+lowered at any mesh size (the drained ``pool-collective`` baseline
+family of ``repro.analysis``).  All budget floors become per-shard:
+every shard must hold one fully decoded slot.  ``shards == 1`` is the
+original single-pool allocator, bit for bit.
 """
 from __future__ import annotations
 
@@ -50,8 +64,14 @@ from repro.models.rglru import PagedRGLRUCache, RGLRUCache
 from repro.models.ssm import PagedSSMCache, SSMCache
 from repro.models.transformer import TransformerLM
 
-__all__ = ["PagedCacheConfig", "PageTable", "PagePayload", "logical_view",
-           "slot_floor"]
+__all__ = ["PagedCacheConfig", "PageTable", "PagePayload", "PageTableError",
+           "logical_view", "slot_floor"]
+
+
+class PageTableError(RuntimeError):
+    """Allocator-invariant violation inside :class:`PageTable` — raised
+    with the slot, stream, and live-slot set named so an engine bug
+    surfaces as a diagnosable serving error, not a bare ``KeyError``."""
 
 
 def slot_floor(cfg, max_ctx: int, page_size: int) -> int:
@@ -86,14 +106,24 @@ class PagedCacheConfig:
                           the old contiguous per-slot allocation.
     ``state_pages``     — pool extent per recurrent *state* stream,
                           including the reserved pages (``None`` =
-                          ``max_batch + RESERVED_PAGES``, the minimum
-                          that can hold every slot).  State pools shard
-                          their page dim across the data axes exactly
-                          like KV pools, but only when the extent
-                          divides the axis — on a mesh, size this like
-                          ``resident_pages`` (a per-device share times
-                          the device count) or the pool replicates and
-                          the per-device state bill grows with the mesh.
+                          ``max_batch + shards * RESERVED_PAGES``, the
+                          minimum that can hold every slot).  State
+                          pools shard their page dim across the data
+                          axes exactly like KV pools, but only when the
+                          extent divides the axis — on a mesh, size
+                          this like ``resident_pages`` (a per-device
+                          share times the device count) or the pool
+                          replicates and the per-device state bill
+                          grows with the mesh.
+    ``shards``          — device-local pool extents to build
+                          (:mod:`repro.serve.paging` layout note).
+                          The default 1 lets the engine auto-resolve
+                          from its mesh's data extent
+                          (:meth:`repro.dist.sharding.ShardingPolicy.decode_shards`);
+                          set it explicitly to build a mesh-shaped
+                          cache geometry on a different (e.g. solo
+                          compile-only) mesh, as the partitioning
+                          auditor does.
 
     Field-local constraints are checked at construction; the
     cross-field budget floor (``resident_pages`` must hold one fully
@@ -107,8 +137,22 @@ class PagedCacheConfig:
     resident_pages: Optional[int] = None
     max_ctx: Optional[int] = None
     state_pages: Optional[int] = None
+    shards: int = 1
 
     def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError(
+                f"PagedCacheConfig.shards must be >= 1 (device-local pool "
+                f"extents), got {self.shards}")
+        if self.resident_pages is not None and self.resident_pages % self.shards:
+            raise ValueError(
+                f"PagedCacheConfig.resident_pages={self.resident_pages} must "
+                f"split evenly across shards={self.shards} device-local "
+                f"extents")
+        if self.state_pages is not None and self.state_pages % self.shards:
+            raise ValueError(
+                f"PagedCacheConfig.state_pages={self.state_pages} must split "
+                f"evenly across shards={self.shards} device-local extents")
         if self.page_size < 1:
             raise ValueError(
                 f"PagedCacheConfig.page_size must be > 0 (tokens per KV "
@@ -142,30 +186,55 @@ class PagedCacheConfig:
                 "PagedCacheConfig.validate needs a positive max_ctx "
                 "(none set on the config and none passed)")
         floor = self.slot_floor(cfg, ctx)
-        if self.resident_pages is not None and self.resident_pages < floor:
+        if (self.resident_pages is not None
+                and self.resident_pages // self.shards < floor):
+            per = (f" per shard ({self.shards} device-local extents)"
+                   if self.shards > 1 else "")
             raise ValueError(
                 f"PagedCacheConfig.resident_pages={self.resident_pages} "
-                f"cannot hold one fully decoded slot: max_ctx={ctx} at "
+                f"cannot hold one fully decoded slot{per}: max_ctx={ctx} at "
                 f"page_size={self.page_size} needs {floor} pages in the "
                 f"largest KV stream; the engine could deadlock with every "
                 f"other slot already offloaded")
 
 
 class _Stream:
-    """Host-side allocator state of one cache stream."""
+    """Host-side allocator state of one cache stream.
 
-    __slots__ = ("where", "kind", "cache_len", "n_lp", "n_pages", "free",
-                 "slot_pages")
+    ``free`` is one free list *per data shard*: ``free[g]`` holds only
+    global page ids inside shard ``g``'s pool extent
+    ``[g*ext, (g+1)*ext)``, whose first ``RESERVED_PAGES`` ids are that
+    shard's private ZERO/DUMP pair (:meth:`zero` / :meth:`dump`)."""
 
-    def __init__(self, where, kind, cache_len, n_lp, n_pages):
+    __slots__ = ("where", "kind", "cache_len", "n_lp", "n_pages", "shards",
+                 "ext", "free", "slot_pages")
+
+    def __init__(self, where, kind, cache_len, n_lp, n_pages, shards=1):
         self.where = where            # ("groups", i) | ("tail", i)
         self.kind = kind
         self.cache_len = cache_len    # None for state streams
         self.n_lp = n_lp              # logical pages (1 for state streams)
         self.n_pages = n_pages        # pool extent incl. reserved pages
-        self.free = list(range(RESERVED_PAGES, n_pages))
+        self.shards = shards
+        assert n_pages % shards == 0, (where, n_pages, shards)
+        self.ext = n_pages // shards  # per-shard pool extent
+        self.free: List[List[int]] = []
+        self.reset_free()
         # KV: {slot: {jdx: pid}}; state: {slot: pid}
         self.slot_pages: Dict[int, object] = {}
+
+    def reset_free(self) -> None:
+        self.free = [list(range(g * self.ext + RESERVED_PAGES,
+                                (g + 1) * self.ext))
+                     for g in range(self.shards)]
+
+    def zero(self, g: int) -> int:
+        """Global id of shard ``g``'s ZERO page."""
+        return g * self.ext + ZERO_PAGE
+
+    def dump(self, g: int) -> int:
+        """Global id of shard ``g``'s DUMP page."""
+        return g * self.ext + DUMP_PAGE
 
     @property
     def is_state(self) -> bool:
@@ -201,14 +270,24 @@ class PageTable:
 
     def __init__(self, model: TransformerLM, max_batch: int, max_ctx: int,
                  page_size: int, resident_pages: Optional[int] = None,
-                 cache_shardings=None, state_pages: Optional[int] = None):
+                 cache_shardings=None, state_pages: Optional[int] = None,
+                 shards: int = 1):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self.model = model
         self.cfg = model.cfg
         self.max_batch = int(max_batch)
         self.max_ctx = int(max_ctx)
         self.page_size = int(page_size)
+        self.shards = int(shards)
+        if self.max_batch % self.shards:
+            raise ValueError(
+                f"max_batch={self.max_batch} slots cannot pin evenly to "
+                f"shards={self.shards} device-local pool extents (slots "
+                f"ride the data axes in contiguous blocks)")
+        self.slots_per_shard = self.max_batch // self.shards
         self._csh = cache_shardings
 
         self.streams: List[_Stream] = []
@@ -216,24 +295,35 @@ class PageTable:
         if resident_pages is None:
             # ample default: every slot fully decoded stays resident
             resident_pages = min_budget * self.max_batch
-        if resident_pages < min_budget:
+        if resident_pages % self.shards:
+            raise ValueError(
+                f"resident_pages={resident_pages} must split evenly across "
+                f"shards={self.shards} device-local extents")
+        if resident_pages // self.shards < min_budget:
+            per = (f" in each of the {self.shards} device-local extents"
+                   if self.shards > 1 else "")
             raise ValueError(
                 f"resident_pages={resident_pages} cannot hold one fully "
-                f"decoded slot ({min_budget} pages of {page_size} tokens "
-                f"for max_ctx={self.max_ctx}); the engine could deadlock "
-                f"with every other slot already offloaded")
+                f"decoded slot{per} ({min_budget} pages of {page_size} "
+                f"tokens for max_ctx={self.max_ctx}); the engine could "
+                f"deadlock with every other slot already offloaded")
         self.resident_pages = int(resident_pages)
-        self.n_pages = self.resident_pages + RESERVED_PAGES
+        # every shard carries its own reserved ZERO/DUMP pair
+        self.n_pages = self.resident_pages + self.shards * RESERVED_PAGES
 
-        state_floor = self.max_batch + RESERVED_PAGES
+        state_floor = self.max_batch + self.shards * RESERVED_PAGES
         if state_pages is None:
             state_pages = state_floor
+        if state_pages % self.shards:
+            raise ValueError(
+                f"state_pages={state_pages} must split evenly across "
+                f"shards={self.shards} device-local extents")
         if state_pages < state_floor:
             raise ValueError(
                 f"state_pages={state_pages} cannot hold every slot's "
                 f"recurrent state: max_batch={self.max_batch} slots need "
                 f"{state_floor} pages (one each plus {RESERVED_PAGES} "
-                f"reserved)")
+                f"reserved per shard x {self.shards} shard(s))")
         self.state_pages = int(state_pages)
 
         for where, kind in self._positions():
@@ -241,12 +331,16 @@ class PageTable:
                 L = self.cfg.decode_cache_len(kind, self.max_ctx)
                 self.streams.append(_Stream(
                     where, kind, L, n_logical_pages(L, page_size),
-                    self.n_pages))
+                    self.n_pages, self.shards))
             else:
                 self.streams.append(_Stream(
-                    where, kind, None, 1, self.state_pages))
+                    where, kind, None, 1, self.state_pages, self.shards))
 
         self.bind_shardings(cache_shardings)
+
+    def shard_of(self, slot: int) -> int:
+        """Data shard (pool extent) batch slot ``slot`` is pinned to."""
+        return int(slot) // self.slots_per_shard
 
     def bind_shardings(self, cache_shardings=None) -> None:
         """(Re)build the jitted cache ops, pinning their cache output to
@@ -279,7 +373,7 @@ class PageTable:
     def reset(self) -> None:
         """Drop all allocations (fresh serve call: every page free)."""
         for st in self.streams:
-            st.free = list(range(RESERVED_PAGES, st.n_pages))
+            st.reset_free()
             st.slot_pages.clear()
 
     # ------------------------------------------------------------- structure
@@ -302,7 +396,7 @@ class PageTable:
     def init_cache(self):
         return self.model.init_paged_cache(
             self.max_batch, self.max_ctx, self.page_size, self.n_pages,
-            state_pages=self.state_pages)
+            state_pages=self.state_pages, shards=self.shards)
 
     # -------------------------------------------------------------- sizing
     def kv_pages_for(self, tokens: int, stream: _Stream) -> int:
@@ -311,37 +405,45 @@ class PageTable:
         return n_logical_pages(
             min(max(int(tokens), 1), stream.cache_len), self.page_size)
 
-    def can_admit(self, plen: int) -> bool:
+    def can_admit(self, plen: int, slot: int) -> bool:
+        """Whether ``slot``'s shard has pages for a ``plen``-token
+        prompt in every stream (allocation is strictly shard-local)."""
+        g = self.shard_of(slot)
         for st in self.streams:
             need = 1 if st.is_state else self.kv_pages_for(plen, st)
-            if len(st.free) < need:
+            if len(st.free[g]) < need:
                 return False
         return True
 
     def free_page_counts(self) -> Dict[Tuple[str, int], int]:
-        return {st.where: len(st.free) for st in self.streams}
+        return {st.where: sum(len(f) for f in st.free)
+                for st in self.streams}
 
     # ------------------------------------------------------------ jitted ops
-    def _insert_fn(self, cache, one, slot, pages):
+    def _insert_fn(self, cache, one, slot, pages, zeros, dumps):
         """Scatter a prefilled batch-1 contiguous cache into this
         slot's freshly assigned pages.  ``pages`` mirrors the stream
         list: KV entries are ``[n_lp]`` int32 page ids (-1 = logical
-        page left unallocated -> block points at ZERO), state entries
-        are scalar int32 page ids."""
+        page left unallocated -> block points at the slot's shard's
+        ZERO), state entries are scalar int32 page ids.  ``zeros`` /
+        ``dumps`` are the per-stream reserved-page ids of the slot's
+        shard, passed traced so one compile serves every slot."""
         for si, st in enumerate(self.streams):
             pc, oc = self._get(cache, st.where), self._get(one, st.where)
             grouped = st.where[0] == "groups"
             if st.is_state:
                 pc = self._ins_state(pc, oc, slot, pages[si], grouped)
             else:
-                pc = self._ins_kv(pc, oc, slot, pages[si], grouped)
+                pc = self._ins_kv(pc, oc, slot, pages[si], grouped,
+                                  zeros[si], dumps[si])
             cache = self._replace(cache, st.where, pc)
         return cache
 
-    def _ins_kv(self, pc: PagedKVCache, oc: KVCache, slot, pids, grouped):
+    def _ins_kv(self, pc: PagedKVCache, oc: KVCache, slot, pids, grouped,
+                zero, dump):
         P, L = pc.page_size, pc.cache_len
         n_lp = pids.shape[0]
-        write_ids = jnp.where(pids < 0, DUMP_PAGE, pids)
+        write_ids = jnp.where(pids < 0, dump, pids)
         pad = n_lp * P - L
 
         def scat(pool, rows):            # rows: [L, kvh, hd]
@@ -349,7 +451,7 @@ class PageTable:
             return pool.at[write_ids].set(
                 src.reshape((n_lp, P) + rows.shape[1:]))
 
-        block_row = jnp.where(pids < 0, ZERO_PAGE, pids)
+        block_row = jnp.where(pids < 0, zero, pids)
         if grouped:
             kp = jax.vmap(scat)(pc.kp, oc.k[:, 0])
             vp = jax.vmap(scat)(pc.vp, oc.v[:, 0])
@@ -375,15 +477,16 @@ class PageTable:
             h_p=pc.h_p.at[pid].set(oc.h[0]),
             block=pc.block.at[slot].set(pid))
 
-    def _release_fn(self, cache, slot):
-        """Point every block-table row of ``slot`` back at DUMP."""
+    def _release_fn(self, cache, slot, dumps):
+        """Point every block-table row of ``slot`` back at its shard's
+        DUMP page (``dumps``: per-stream traced ids)."""
         for si, st in enumerate(self.streams):
             pc = self._get(cache, st.where)
             grouped = st.where[0] == "groups"
             if grouped:
-                block = pc.block.at[:, slot].set(DUMP_PAGE)
+                block = pc.block.at[:, slot].set(dumps[si])
             else:
-                block = pc.block.at[slot].set(DUMP_PAGE)
+                block = pc.block.at[slot].set(dumps[si])
             cache = self._replace(cache, st.where,
                                   dataclasses.replace(pc, block=block))
         return cache
@@ -461,38 +564,67 @@ class PageTable:
         return cache
 
     # ----------------------------------------------------------- operations
+    def _reserved_ids(self, slot: int):
+        """Per-stream (zeros, dumps) traced scalars of ``slot``'s shard,
+        for the jitted ops that re-target dead block rows."""
+        g = self.shard_of(slot)
+        zeros = tuple(jnp.asarray(st.zero(g), jnp.int32)
+                      for st in self.streams)
+        dumps = tuple(jnp.asarray(st.dump(g), jnp.int32)
+                      for st in self.streams)
+        return zeros, dumps
+
     def admit(self, cache, one, slot: int, plen: int):
-        """Allocate pages for a freshly prefilled request and scatter
-        its contiguous batch-1 cache into them."""
+        """Allocate pages (from ``slot``'s shard extent) for a freshly
+        prefilled request and scatter its contiguous batch-1 cache into
+        them."""
+        g = self.shard_of(slot)
         pages = []
         for st in self.streams:
             if st.is_state:
-                pid = st.free.pop()
+                pid = st.free[g].pop()
                 st.slot_pages[slot] = pid
                 pages.append(jnp.asarray(pid, jnp.int32))
             else:
                 need = self.kv_pages_for(plen, st)
-                pids = [st.free.pop() for _ in range(need)]
+                pids = [st.free[g].pop() for _ in range(need)]
                 st.slot_pages[slot] = dict(enumerate(pids))
                 vec = np.full((st.n_lp,), -1, np.int32)
                 vec[:need] = pids
                 pages.append(jnp.asarray(vec))
+        zeros, dumps = self._reserved_ids(slot)
         return self._insert_jit(cache, one, jnp.asarray(slot, jnp.int32),
-                                tuple(pages))
+                                tuple(pages), zeros, dumps)
 
     def release(self, cache, slot: int):
         """Free a retired slot's pages; its block rows return to DUMP."""
+        g = self.shard_of(slot)
         for st in self.streams:
             held = st.slot_pages.pop(slot, None)
             if held is None:
                 continue
-            st.free.extend([held] if st.is_state else held.values())
-        return self._release_jit(cache, jnp.asarray(slot, jnp.int32))
+            st.free[g].extend([held] if st.is_state else held.values())
+        _, dumps = self._reserved_ids(slot)
+        return self._release_jit(cache, jnp.asarray(slot, jnp.int32), dumps)
 
     def prepare_step(self, cache, slot: int, pos: int):
         """Ensure the page each KV stream will write at ``pos`` is
-        assigned.  Returns ``(cache, ok)``; ``ok`` is False when a pool
-        is exhausted (the engine must preempt a victim and retry)."""
+        assigned (from ``slot``'s shard extent).  Returns
+        ``(cache, ok)``; ``ok`` is False when a pool is exhausted (the
+        engine must preempt a victim and retry).
+
+        Invariant — *partial progress is committed*: page assignments
+        for streams visited before the exhausted one stay in the cache
+        and in ``slot_pages`` even on the ``ok=False`` return.  That is
+        deliberate and safe: an assigned page is recorded under its
+        ``jdx``, so the post-preemption retry skips it (``jdx in
+        held``) and only allocates the still-missing streams, and the
+        page content is all-zeros until the decode step actually writes
+        through the block table — generations are bit-identical to a
+        serve that never exhausted the pool
+        (``tests/test_paged_cache.py`` pins this).  Callers must not
+        assume the cache is untouched when ``ok`` is False."""
+        g = self.shard_of(slot)
         for si, st in enumerate(self.streams):
             if st.is_state:
                 continue
@@ -500,9 +632,9 @@ class PageTable:
             held = st.slot_pages[slot]
             if jdx in held:
                 continue
-            if not st.free:
+            if not st.free[g]:
                 return cache, False
-            pid = st.free.pop()
+            pid = st.free[g].pop()
             held[jdx] = pid
             cache = self._assign_jit[si](
                 cache, jnp.asarray(slot, jnp.int32),
@@ -517,14 +649,21 @@ class PageTable:
         round-trips through host memory, not a device alias.
         """
         host = jax.devices("cpu")[0]
+        g = self.shard_of(slot)
         kv, state = {}, {}
         for si, st in enumerate(self.streams):
+            if slot not in st.slot_pages:
+                raise PageTableError(
+                    f"offload: slot {slot} holds no pages in stream "
+                    f"{st.where} (kind={st.kind!r}); live slots there: "
+                    f"{sorted(st.slot_pages)} — offload victims must be "
+                    f"admitted slots")
             held = st.slot_pages.pop(slot)
             if st.is_state:
                 conv, h = self._fetch_jit[si](cache, jnp.asarray(held, jnp.int32))
                 state[si] = (np.asarray(jax.device_put(conv, host)),
                              np.asarray(jax.device_put(h, host)))
-                st.free.append(held)
+                st.free[g].append(held)
             else:
                 jdxs = sorted(held)
                 ids = jnp.asarray([held[j] for j in jdxs], jnp.int32)
@@ -532,23 +671,30 @@ class PageTable:
                 kv[si] = (dict(zip(jdxs, range(len(jdxs)))),
                           np.asarray(jax.device_put(kpg, host)),
                           np.asarray(jax.device_put(vpg, host)))
-                st.free.extend(held.values())
-        cache = self._release_jit(cache, jnp.asarray(slot, jnp.int32))
+                st.free[g].extend(held.values())
+        _, dumps = self._reserved_ids(slot)
+        cache = self._release_jit(cache, jnp.asarray(slot, jnp.int32), dumps)
         return cache, PagePayload(kv=kv, state=state, tokens=int(tokens))
 
-    def can_restore(self, payload: PagePayload) -> bool:
+    def can_restore(self, payload: PagePayload, slot: int) -> bool:
+        """Whether ``slot``'s shard has pages for the payload in every
+        stream (restore allocates strictly shard-locally, like admit)."""
+        g = self.shard_of(slot)
         need = payload.pages_needed()
         for si, st in enumerate(self.streams):
-            if len(st.free) < (1 if st.is_state else need[si]):
+            if len(st.free[g]) < (1 if st.is_state else need[si]):
                 return False
         return True
 
     def restore(self, cache, slot: int, payload: PagePayload):
-        """Re-admit an offloaded slot: new pages, same bytes."""
+        """Re-admit an offloaded slot: new pages (from ``slot``'s shard
+        extent — any slot/shard, not necessarily the original), same
+        bytes."""
+        g = self.shard_of(slot)
         args = []
         for si, st in enumerate(self.streams):
             if st.is_state:
-                pid = st.free.pop()
+                pid = st.free[g].pop()
                 st.slot_pages[slot] = pid
                 conv, h = payload.state[si]
                 args.append((jnp.asarray(pid, jnp.int32),
@@ -556,7 +702,7 @@ class PageTable:
             else:
                 jdx_rows, kpg, vpg = payload.kv[si]
                 jdxs = list(jdx_rows)
-                pids = [st.free.pop() for _ in range(len(jdxs))]
+                pids = [st.free[g].pop() for _ in range(len(jdxs))]
                 st.slot_pages[slot] = dict(zip(jdxs, pids))
                 args.append((jnp.asarray(pids, jnp.int32),
                              jnp.asarray(jdxs, jnp.int32),

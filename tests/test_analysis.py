@@ -66,8 +66,6 @@ from repro.serve import PagedCacheConfig, ServeEngine, TrafficModel
 
 BASELINE = (pathlib.Path(__file__).parent.parent
             / "src/repro/analysis/baseline.json")
-GSPMD_KEY = ("sharding:gspmd-gather-around-pallas-call:"
-             "qwen1.5-0.5b/pallas_paged/mesh2:decode:kernels/paged_attention")
 
 
 def _kv(src=0, **kw):
@@ -124,6 +122,32 @@ def test_pool_gather_materializes_resident_view():
     assert res.buckets["gather_view_read"] == view_bytes
     assert res.buckets["gather_view_write"] == view_bytes
     assert res.buckets["kv_sweep_read"] == view_bytes
+
+
+def test_walker_shard_map_bills_per_shard_times_shard_count():
+    # device-local decode shape: the body gathers from its LOCAL pool
+    # extent; per-shard bytes x the shard count (mesh axes not in
+    # `auto`) is the exact global bill for evenly split pool operands
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import AbstractMesh
+
+    pool = jnp.zeros((8, 4, 2), jnp.float32)      # 4 pages per shard
+    idx = jnp.array([0, 3, 1])
+
+    def f(pool, idx):
+        view = pool[idx]
+        return (view * 2.0).sum()
+
+    smap = shard_map(f, mesh=AbstractMesh((("data", 2), ("model", 1))),
+                     in_specs=(PartitionSpec("data"), PartitionSpec()),
+                     out_specs=PartitionSpec(), check_rep=False)
+    closed = jax.make_jaxpr(smap)(pool, idx)
+    assert closed.jaxpr.eqns[0].primitive.name == "shard_map"
+    res = walk_jaxpr(closed, [Taint("kv_pool", src=0), None])
+    per_shard = 3 * 4 * 2 * 4        # the gathered view of a local pool
+    assert res.buckets["gather_view_read"] == 2 * per_shard
+    assert res.buckets["gather_view_write"] == 2 * per_shard
+    assert res.buckets["kv_sweep_read"] == 2 * per_shard
 
 
 def test_scan_multiplies_body_bytes_by_trip_count():
@@ -237,6 +261,29 @@ def test_sharding_pass_flags_gspmd_gather_around_pallas_call():
     assert "arg0" in gather[0].detail
 
 
+def test_sharding_pass_skips_manual_shard_map_pallas_sites():
+    # same sharded-pool operand as above, but the site sits inside a
+    # shard_map region (PallasSite.manual): its operands are device-
+    # local by construction, so the GSPMD-gather lint must not fire
+    closed = jax.make_jaxpr(lambda p: p.sum())(jnp.zeros((8, 8, 2, 4)))
+    art = _artifact(closed, [Taint("kv_pool", src=0)],
+                    specs=[PartitionSpec("data", None, None, None)])
+    art._walk = WalkResult(
+        buckets={c: 0 for c in TRAFFIC_CLASSES},
+        pallas_sites=[PallasSite(
+            name_and_src="_kernel at /x/src/repro/kernels/paged_attention/"
+                         "kernel.py:51",
+            multiplier=2,
+            operand_taints=(Taint("kv_pool", src=0),),
+            operand_shapes=((4, 8, 2, 4),),
+            manual=True)],
+        problems=[], outvar_taints=(None,))
+    unit = _unit(art, mode="pallas_paged", axis_sizes={"data": 2, "model": 1},
+                 page_size=8)
+    assert [f for f in sharding_pass(unit)
+            if f.code == "gspmd-gather-around-pallas-call"] == []
+
+
 def test_sharding_pass_flags_unsharded_pool_page_dim():
     closed = jax.make_jaxpr(lambda p: p.sum())(jnp.zeros((8, 8, 2, 4)))
     art = _artifact(closed, [Taint("kv_pool", src=0)])   # spec: replicated
@@ -289,22 +336,17 @@ def test_diff_baseline_gates_new_and_stale_not_info():
     assert baseline_payload([info])["findings"] == []
 
 
-def test_checked_in_baseline_is_the_known_collective_families():
-    # the allowlist may contain exactly two things: the single PR 6
-    # GSPMD-gather finding and the mesh-parameterized pool-collective
-    # family it generalizes to (PR 7) — anything else is a regression
-    # someone baselined instead of fixing
+def test_checked_in_baseline_is_empty_after_shard_map_drain():
+    # PR 6 baselined the single GSPMD-gather finding; PR 7 generalized
+    # it into the mesh-parameterized pool-collective family (48 keys at
+    # mesh 2/8/64/512); the device-local shard_map decode layout
+    # drained every one of them.  The baseline must STAY empty — a new
+    # pool collective belongs fixed, not allowlisted, and this test is
+    # the tripwire against quietly re-baselining one.
     data = json.loads(BASELINE.read_text())
     assert data["schema"] == BASELINE_SCHEMA
-    keys = [e["key"] for e in data["findings"]]
-    assert GSPMD_KEY in keys
-    family = [k for k in keys if k != GSPMD_KEY]
-    assert family, "partition pool-collective family missing"
-    assert all(k.startswith("partition:pool-collective:") for k in family)
-    # the family is audited at every acceptance mesh size
-    assert {key_mesh_size(k) for k in family} == {2, 8, 64, 512}
-    notes = load_baseline(BASELINE)
-    assert all(notes[k] for k in keys)     # every entry carries provenance
+    assert data["findings"] == [], [e["key"] for e in data["findings"]]
+    assert load_baseline(BASELINE) == {}
 
 
 # ------------------------------------------------- engine-level cross-checks

@@ -184,6 +184,61 @@ def test_offload_round_trip_bit_exact(arch):
               f"{arch}: post-restore decode")
 
 
+def test_offload_unadmitted_slot_raises_named_error():
+    """Offloading a slot that holds no pages (double preemption, or a
+    scheduler bug picking a retired victim) must fail as a named
+    :class:`PageTableError` carrying the slot, the stream, and the
+    live-slot set — not as a bare ``KeyError`` out of the allocator's
+    bookkeeping — and must not corrupt the table on the way out."""
+    from repro.serve.paging import PageTableError
+
+    (model, params, decode, table, cache_c, cache_p,
+     tok, pos) = _build_pair("qwen1.5-0.5b", (7, 10))
+    cache_p, payload = table.offload(cache_p, 1, int(pos[1]))
+    with pytest.raises(PageTableError) as ei:
+        table.offload(cache_p, 1, int(pos[1]))
+    msg = str(ei.value)
+    assert "slot 1 holds no pages" in msg
+    assert "groups" in msg                     # the stream is named
+    assert "live slots there: [0]" in msg      # the still-admitted set
+    # the failed call mutated nothing: restore + decode stay bit-exact
+    cache_p = table.restore(cache_p, 1, payload)
+    _assert_views_equal(cache_c, cache_p, "post-error restore")
+    _lockstep(model, params, decode, table, cache_c, cache_p, tok, pos, 2,
+              "qwen1.5-0.5b: post-error decode")
+
+
+def test_prepare_step_commits_partial_progress_and_retry_is_exact():
+    """Pool exhaustion mid-``prepare_step``: assignments for streams
+    visited before the exhausted one stay committed (the documented
+    invariant) — the retry after pages free up skips them, allocates
+    only the missing streams, and the continued decode stays
+    bit-identical to the contiguous cache, i.e. to a serve that never
+    exhausted the pool."""
+    (model, params, decode, table, cache_c, cache_p,
+     tok, pos) = _build_pair("gemma2-9b", (3, 10))
+    local, glob = [st for st in table.streams if not st.is_state]
+    assert local.kind == "local" and glob.kind == "global"
+    # pos 5 crosses a page boundary in BOTH streams for slot 0; empty
+    # the global stream's free list so the local assignment commits and
+    # the global one exhausts
+    stolen, glob.free[0] = glob.free[0], []
+    cache_p, ok = table.prepare_step(cache_p, 0, 5)
+    assert not ok
+    assert 1 in local.slot_pages[0]        # partial progress committed
+    assert 1 not in glob.slot_pages[0]
+    committed = local.slot_pages[0][1]
+    # a victim's pages return (engine preemption) -> the retry
+    # succeeds, reusing the committed page instead of re-allocating
+    glob.free[0] = stolen
+    cache_p, ok = table.prepare_step(cache_p, 0, 5)
+    assert ok
+    assert local.slot_pages[0][1] == committed
+    assert 1 in glob.slot_pages[0]
+    _lockstep(model, params, decode, table, cache_c, cache_p, tok, pos, 4,
+              "gemma2-9b: post-retry decode")
+
+
 # ---------------------------------------------------------------------------
 # engine level: past-max_len decode, preemption, all archs
 # ---------------------------------------------------------------------------

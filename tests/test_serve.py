@@ -186,6 +186,24 @@ def test_per_request_param_validation(engine, mixed_prompts):
         engine.serve(mixed_prompts[:2], 2, top_k=[2, 0])
 
 
+def test_temperature_rejected_like_top_k(engine, mixed_prompts):
+    """A negative temperature flips the softmax ordering and NaN poisons
+    every draw — both must be rejected up front with the offending
+    request index named, symmetric with the ``top_k >= 1`` check, in
+    both the scalar and per-request forms."""
+    with pytest.raises(ValueError, match=r"temperature.*\(request 0\)"):
+        engine.serve(mixed_prompts[:2], 2, temperature=-1.0)
+    with pytest.raises(ValueError, match=r"temperature.*\(request 1\)"):
+        engine.serve(mixed_prompts[:2], 2, temperature=[0.5, float("nan")])
+    with pytest.raises(ValueError, match=r"temperature.*\(request 1\)"):
+        engine.serve(mixed_prompts[:2], 2, temperature=[0.5, -0.25])
+    with pytest.raises(ValueError, match=r"top_k.*\(request 1\)"):
+        engine.serve(mixed_prompts[:2], 2, top_k=[2, 0])
+    # zero stays valid: it IS greedy decoding
+    out = engine.serve(mixed_prompts[:1], 1, temperature=0.0)
+    assert out[0].shape == (1,)
+
+
 def test_top_k_one_is_greedy(engine, mixed_prompts):
     hot = engine.serve(mixed_prompts[:2], 6, temperature=HOT, top_k=1, seed=5)
     greedy = engine.serve(mixed_prompts[:2], 6)
