@@ -13,6 +13,13 @@ archs leave inactive experts untouched (the Algorithm-1
 partial-coverage regime) and small archs on big modules lean on PAAR.
 Step periods come from the dry-run roofline bound when cached, else a
 50 tok/s serving assumption.
+
+Since PR 9 the engine is paged and also emits its per-step page-access
+trace: each row carries ``trace_refresh_savings`` — FULL_RTC savings
+replayed from the *measured* access stream under every placement
+policy (:mod:`repro.core.placement`), next to the analytic profile's
+numbers (whose accounting is pinned to the contiguous mode and is
+unchanged).
 """
 from __future__ import annotations
 
@@ -29,9 +36,14 @@ from benchmarks.common import emit, save_json, timed
 from repro.configs import ARCH_IDS, get_config
 from repro.core.allocator import allocate_workload
 from repro.core.dram import GiB, smallest_fitting_module
+from repro.core.placement import (PLACEMENT_POLICIES, build_placement,
+                                  fitting_spec)
+from repro.core.refresh_sim import simulate_trace
 from repro.core.rtc import Variant, evaluate, rtt_paar_split
+from repro.core.trace import PageAccessTrace, window_masks
 from repro.models.transformer import TransformerLM
-from repro.serve import ServeEngine, ServeTelemetry, TrafficModel
+from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
+                         TrafficModel)
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 SERVE_CTX = 8192        # deployment context the byte constants assume
@@ -49,35 +61,62 @@ def _step_time(arch: str, default: float = 0.02) -> float:
     return default
 
 
-def _serve_telemetry(arch: str) -> ServeTelemetry:
+_ITEMSIZE = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+
+def _serve_telemetry(arch: str):
     """Serve a mixed-length request trace through the batched engine.
 
     The engine runs the smoke config (CPU-sized compute); the telemetry
     carries the FULL config's byte constants, so the emitted profile
     pairs a *measured* scheduling trace with production byte magnitudes.
+
+    The engine is paged (page_size=8, ample budget) so it also emits
+    the per-step page-access trace, but ``decode_mode`` stays pinned to
+    ``"contiguous"``: the analytic profile — and every savings number
+    derived from it — is byte-identical to the old contiguous engine's
+    (ample-budget paged serving schedules and generates identically).
+    Returns ``(telemetry, trace_refresh_savings)`` where the latter is
+    the measured-trace FULL_RTC savings per placement policy on a
+    module sized to the engine's own pools.
     """
     smoke = get_config(arch, smoke=True)
     model = TransformerLM(smoke)
     params = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, max_len=ENGINE_LEN, max_batch=2)
+    engine = ServeEngine(model, params, max_len=ENGINE_LEN, max_batch=2,
+                         paged=PagedCacheConfig(page_size=8))
+    trace = PageAccessTrace(engine._table.stream_names())
     # ctx_scale maps the smoke engine's measured per-slot occupancy onto
     # the deployment context, so KV traffic carries SERVE_CTX magnitudes
     # (not the 32-token smoke contexts) while keeping the trace's shape.
     tele = ServeTelemetry(TrafficModel.from_config(get_config(arch),
                                                    max_len=SERVE_CTX),
-                          ctx_scale=SERVE_CTX / ENGINE_LEN)
+                          ctx_scale=SERVE_CTX / ENGINE_LEN,
+                          decode_mode="contiguous", trace=trace)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, smoke.vocab_size, (n,)).astype(np.int32)
                for n in PROMPT_LENS]
     engine.serve(prompts, max_new_tokens=NEW_TOKENS, telemetry=tele)
-    return tele
+
+    geoms = engine._table.stream_geometries()
+    pbytes = smoke.param_counts()["total"] * _ITEMSIZE[smoke.dtype]
+    spec = fitting_spec(geoms, param_bytes=pbytes)
+    trace_savings = {}
+    for pol in PLACEMENT_POLICIES:
+        pl = build_placement(pol, spec, geoms, param_bytes=pbytes)
+        res = simulate_trace(spec, Variant.FULL_RTC,
+                             masks=window_masks(trace, pl),
+                             alloc_lo=pl.alloc_lo, alloc_rows=pl.alloc_rows)
+        assert res.violations == 0, (arch, pol, res)
+        trace_savings[pol] = res.refresh_savings
+    return tele, trace_savings
 
 
 def run():
     rows = []
     for arch in ARCH_IDS:
         cfg = get_config(arch)
-        tele = _serve_telemetry(arch)
+        tele, trace_savings = _serve_telemetry(arch)
         w = tele.workload_profile(name=f"{cfg.name}/serve",
                                   step_period_s=_step_time(arch))
         spec = smallest_fitting_module(w.footprint_bytes)
@@ -94,6 +133,7 @@ def run():
             "rtt": rtt, "paar": paar,
             "dram_savings": rep.dram_savings,
             "refresh_savings": rep.refresh_savings,
+            "trace_refresh_savings": trace_savings,
         })
     return rows
 
@@ -101,10 +141,13 @@ def run():
 def main():
     rows, us = timed(run, repeat=1)
     for r in rows:
+        ts = r["trace_refresh_savings"]
         emit(f"lm_rtc_{r['arch']}", us / len(rows),
              f"refresh_savings={r['refresh_savings']:.3f} "
-             f"dram_savings={r['dram_savings']:.3f} ({r['dram_gb']}GB, "
-             f"{r['decode_steps']} engine steps)")
+             f"dram_savings={r['dram_savings']:.3f} "
+             f"trace[rm/bi/sc]="
+             + "/".join(f"{ts[p]:.3f}" for p in PLACEMENT_POLICIES)
+             + f" ({r['dram_gb']}GB, {r['decode_steps']} engine steps)")
     save_json("lm_rtc", rows)
 
 

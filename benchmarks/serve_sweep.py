@@ -38,14 +38,30 @@ identical across the matrix (weak scaling), and with the device-local
 layout no pool byte moves cross-device at any size; the analysis CI
 gate owns those assertions, the bench keeps the trajectory.
 
+v5 closes the trace loop (ROADMAP item 4): every timed engine also
+records its per-step page-access trace (``telemetry.trace``), and each
+row carries ``trace_rtc`` — the measured-trace RTC refresh savings
+under every :data:`repro.core.placement.PLACEMENT_POLICIES` mapping of
+the engine's pools onto a pool-sized DRAM module — plus
+``trace_vs_analytic``, the cross-check that the affine cursor fed the
+trace's mean per-window row count reproduces the trace-driven savings
+(the two access models must agree on a near-stationary decode stream;
+drift fails the run).  Traces are also asserted identical across
+backends per arch: page residency is scheduling, not kernel choice.
+
 Schema (``BENCH_serve.json``)::
 
-    {"schema": "serve-decode-v4",
+    {"schema": "serve-decode-v5",
      "rows": [{"arch", "batch", "backend", "shards", "decode_steps",
                "steps_per_sec", "tok_per_sec",
                "kv_read_bytes_per_step", "gather_bytes_per_step",
                "static_bytes_per_step", "static_classes",
                "static_match", "page_size",
+               "trace_rtc": {"<policy>": {"refresh_savings",
+                                          "alloc_rows", "rows_used",
+                                          "mean_rows_touched"}, ...},
+               "trace_vs_analytic": {"trace_savings", "affine_savings",
+                                     "delta", "match"},
                "mesh_matrix": {"<N>": {"static_per_device_bytes",
                                        "collective_bytes"}, ...}}, ...]}
 
@@ -78,9 +94,16 @@ import numpy as np
 from benchmarks.common import emit
 from repro.analysis import decode_traffic_report, unit_from_engine
 from repro.configs import ARCH_IDS, get_config
+from repro.core.placement import (PLACEMENT_POLICIES, build_placement,
+                                  fitting_spec)
+from repro.core.refresh_sim import simulate, simulate_trace
+from repro.core.rtc import Variant
+from repro.core.trace import PageAccessTrace, window_masks
 from repro.models.transformer import TransformerLM
 from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
                          TrafficModel)
+
+_ITEMSIZE = {"bfloat16": 2, "float16": 2, "float32": 4}
 
 # Default sweep: one arch per cache family (dense GQA append, softcap +
 # local/global ring mix, recurrent state pages) keeps the CI step small;
@@ -134,6 +157,49 @@ def partition_dry_run(archs) -> dict:
     return cols
 
 
+def trace_rtc_columns(trace: PageAccessTrace, table, smoke) -> tuple:
+    """(trace_rtc, trace_vs_analytic) for one engine's measured trace.
+
+    The module is sized to the engine's own pools + smoke weights
+    (``fitting_spec``) — a trace-scale study; the *policies* are what
+    is compared, not absolute module size.  The cross-check replays the
+    row-major placement's mean per-window touched-row count through the
+    affine ``simulate`` — FULL_RTC's explicit count depends only on the
+    per-window accessed-row count inside the allocation, so the two
+    access models must agree up to the rounding of that mean.
+    """
+    geoms = table.stream_geometries()
+    pbytes = smoke.param_counts()["total"] * _ITEMSIZE[smoke.dtype]
+    spec = fitting_spec(geoms, param_bytes=pbytes)
+    cols, cross = {}, None
+    for pol in PLACEMENT_POLICIES:
+        pl = build_placement(pol, spec, geoms, param_bytes=pbytes)
+        masks = window_masks(trace, pl)
+        res = simulate_trace(spec, Variant.FULL_RTC, masks=masks,
+                             alloc_lo=pl.alloc_lo, alloc_rows=pl.alloc_rows)
+        assert res.violations == 0, (pol, res)
+        cols[pol] = {
+            "refresh_savings": res.refresh_savings,
+            "alloc_rows": pl.alloc_rows,
+            "rows_used": pl.rows_used(),
+            "mean_rows_touched": float(masks.sum(axis=1).mean()),
+        }
+        if pol == "row-major":
+            acc = int(round(masks.sum(axis=1).mean()))
+            affine = simulate(
+                spec, Variant.FULL_RTC, alloc_rows=pl.alloc_rows,
+                rows_accessed_per_window=acc, n_windows=masks.shape[0],
+                alloc_lo=pl.alloc_lo)
+            delta = abs(affine.refresh_savings - res.refresh_savings)
+            cross = {
+                "trace_savings": res.refresh_savings,
+                "affine_savings": affine.refresh_savings,
+                "delta": delta,
+                "match": bool(delta <= 0.01),
+            }
+    return cols, cross
+
+
 def sweep_arch(arch: str, max_batch: int, new_tokens: int,
                page_size: int) -> list:
     smoke = get_config(arch, smoke=True)
@@ -144,7 +210,7 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
                for n in PROMPT_LENS]
     traffic = TrafficModel.from_config(get_config(arch), max_len=SERVE_CTX,
                                        page_size=page_size)
-    rows, outs = [], {}
+    rows, outs, traces = [], {}, {}
     engine_len = 16 + new_tokens
     variants = [("gather", None), ("pallas_paged", None)]
     if len(jax.devices()) >= 2:
@@ -173,11 +239,17 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
         # ctx_scale maps the smoke engine's occupancies onto SERVE_CTX
         # so the row-exact KV sweep and the (occupancy-independent)
         # gather view bytes describe the same deployment context.
-        tele = ServeTelemetry(traffic, ctx_scale=SERVE_CTX / engine_len)
-        # warm the executables so steps/sec measures the loop, not tracing
+        trace = PageAccessTrace(engine._table.stream_names())
+        tele = ServeTelemetry(traffic, ctx_scale=SERVE_CTX / engine_len,
+                              trace=trace)
+        # warm the executables so steps/sec measures the loop, not
+        # tracing (no telemetry -> the trace records only the timed run)
         engine.serve([prompts[0]], 2, seed=1)
         outs[(backend, shards)] = engine.serve(prompts, new_tokens, seed=7,
                                                telemetry=tele)
+        traces[(backend, shards)] = trace
+        trace_rtc, trace_cross = trace_rtc_columns(trace, engine._table,
+                                                   smoke)
         n = max(tele.decode_steps, 1)
         # static audit of the exact decode executable this sweep timed
         # (smoke scale, full occupancy) — the agreement bit is the
@@ -202,6 +274,8 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
                                for k in sorted(audit["expected"])},
             "static_match": bool(audit["match"]),
             "page_size": page_size,
+            "trace_rtc": trace_rtc,
+            "trace_vs_analytic": trace_cross,
         })
     ref = outs[("gather", 1)]
     for key, got in outs.items():
@@ -211,6 +285,16 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
             np.testing.assert_array_equal(
                 a, b, err_msg=f"{arch} request {i}: {key} generations "
                               f"diverged from gather")
+    # page residency is pure scheduling — every backend on the same
+    # workload must produce the identical page-access trace (the
+    # solo/shard_map allocators differ in extent layout, so only the
+    # solo rows are compared step for step)
+    ref_steps = traces[("gather", 1)].steps
+    for key, tr in traces.items():
+        if key[1] != 1 or key == ("gather", 1):
+            continue
+        assert tr.steps == ref_steps, (
+            f"{arch}: {key} page trace diverged from gather")
     return rows
 
 
@@ -238,6 +322,7 @@ def main():
     for r in rows:
         us = 1e6 / r["steps_per_sec"] if r["steps_per_sec"] else 0.0
         m8 = (r["mesh_matrix"] or {}).get("8") or {}
+        tr = r["trace_rtc"]
         emit(f"serve_decode_{r['arch']}_{r['backend']}"
              + (f"_sm{r['shards']}" if r["shards"] > 1 else ""), us,
              f"steps/s={r['steps_per_sec']:.2f} "
@@ -246,16 +331,24 @@ def main():
              f"static/step={r['static_bytes_per_step']} "
              f"perdev@8={m8.get('static_per_device_bytes')} "
              f"collective/dev@8={m8.get('collective_bytes')} "
-             f"audit={'ok' if r['static_match'] else 'DRIFT'}")
+             f"trace_rtc[rm/bi/sc]="
+             + "/".join(f"{tr[p]['refresh_savings']:.3f}"
+                        for p in PLACEMENT_POLICIES)
+             + f" audit={'ok' if r['static_match'] else 'DRIFT'}")
     if not all(r["static_match"] for r in rows):
         raise SystemExit("static audit disagrees with telemetry — "
                          "run python -m repro.analysis for the class diff")
     if not any(r["shards"] > 1 for r in rows):
         raise SystemExit("no shard_map row was swept — the forced "
                          "2-device topology did not take effect")
+    if not all(r["trace_vs_analytic"]["match"] for r in rows):
+        bad = [(r["arch"], r["backend"], r["trace_vs_analytic"])
+               for r in rows if not r["trace_vs_analytic"]["match"]]
+        raise SystemExit(f"trace-driven refresh savings diverged from the "
+                         f"affine model on equivalent inputs: {bad}")
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
-        json.dump({"schema": "serve-decode-v4", "rows": rows}, f, indent=1)
+        json.dump({"schema": "serve-decode-v5", "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)")
 
 

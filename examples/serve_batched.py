@@ -57,9 +57,17 @@ def main():
                     help="statically audit the engine's lowered decode "
                          "step (repro.analysis) and print the per-class "
                          "byte cross-check against telemetry's model")
+    ap.add_argument("--trace-rtc", action="store_true",
+                    help="record the per-step page-access trace and "
+                         "replay it through the event-level refresh "
+                         "simulator under every DRAM placement policy "
+                         "(paged mode)")
     args = ap.parse_args()
     if args.decode_backend == "pallas_paged" and not args.paged:
         ap.error("--decode-backend pallas_paged requires --paged")
+    if args.trace_rtc and not args.paged:
+        ap.error("--trace-rtc requires --paged (page-access traces come "
+                 "from the page table)")
 
     cfg = get_config(args.arch, smoke=True)
     model = TransformerLM(cfg)
@@ -77,10 +85,14 @@ def main():
     # deployment context (ctx_scale) so KV traffic and cache footprint
     # describe the same serve_ctx-sized deployment.
     full = get_config(args.arch)
+    trace = None
+    if args.trace_rtc:
+        from repro.core.trace import PageAccessTrace
+        trace = PageAccessTrace(engine.page_table.stream_names())
     tele = ServeTelemetry(
         TrafficModel.from_config(full, args.serve_ctx,
                                  page_size=args.page_size if args.paged else 0),
-        ctx_scale=args.serve_ctx / max_len)
+        ctx_scale=args.serve_ctx / max_len, trace=trace)
 
     rng = np.random.default_rng(0)
     lens = rng.integers(1, args.max_prompt_len + 1, args.requests)
@@ -115,6 +127,32 @@ def main():
                   f"{tele.kv_read_bytes_total:,}-byte KV + state sweep "
                   f"(the copy the pallas_paged kernel never makes)")
     print(f"sample continuation: {outs[0][:10].tolist()}")
+
+    if args.trace_rtc:
+        # replay the measured page-access stream through the event-level
+        # refresh simulator: one DRAM module sized to the engine's own
+        # pools, every placement policy as a column
+        from repro.core.placement import (PLACEMENT_POLICIES,
+                                          build_placement, fitting_spec)
+        from repro.core.refresh_sim import simulate_trace
+        from repro.core.trace import window_masks
+        itemsize = {"bfloat16": 2, "float16": 2, "float32": 4}[cfg.dtype]
+        pbytes = cfg.param_counts()["total"] * itemsize
+        geoms = engine.page_table.stream_geometries()
+        tspec = fitting_spec(geoms, param_bytes=pbytes)
+        print(f"\ntrace-driven RTC replay ({trace.n_steps} steps, "
+              f"{tspec.n_rows} rows):")
+        for policy in PLACEMENT_POLICIES:
+            placement = build_placement(policy, tspec, geoms,
+                                        param_bytes=pbytes)
+            masks = window_masks(trace, placement)
+            res = simulate_trace(tspec, Variant.FULL_RTC, masks=masks,
+                                 alloc_lo=placement.alloc_lo,
+                                 alloc_rows=placement.alloc_rows)
+            assert res.violations == 0, (policy, res)
+            print(f"  {policy:<17s} alloc={placement.alloc_rows:>6d} rows "
+                  f"touched/win={masks.sum(axis=1).mean():.0f} "
+                  f"full-rtc refresh -{res.refresh_savings:.1%}")
 
     if args.audit:
         # static cross-check: walk the decode executable we just served

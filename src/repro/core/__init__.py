@@ -1,3 +1,41 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's system layer: DRAM geometry, RTC policies, and the two
+access models they are evaluated under.
+
+Module map (energy path, left to right): :mod:`~repro.core.dram` (module
+geometry/timing) -> :mod:`~repro.core.workload` (phase-level traffic
+profiles) -> :mod:`~repro.core.rate_matching` / :mod:`~repro.core.rtc`
+(closed-form RTT/PAAR evaluation) -> :mod:`~repro.core.energy`, with
+:mod:`~repro.core.refresh_sim` as the event-level validator of the
+closed forms and :mod:`~repro.core.allocator` mapping workloads to row
+allocations.
+
+Placement and traces (PR 9).  The closed-form model reasons about an
+*affine* access stream — ``rows_accessed_per_window`` consecutive rows
+sweeping the allocation.  Real serving accesses are page-granular and
+scheduling-dependent, and which DRAM rows they replenish depends on a
+policy the paper leaves to the memory controller: how data is mapped
+onto banks and rows.  That axis is split across two deliberately
+decoupled modules:
+
+* :mod:`~repro.core.placement` — geometry only: maps every physical
+  page of the serving stack's pool streams (plus the resident weight
+  region) to row intervals of a :class:`~repro.core.dram.DRAMSpec`,
+  under ``row-major``, DRMap/PENDRAM-style ``bank-interleaved``, or
+  refresh-aware ``slot-colocated`` packing.  It never imports serve
+  code; the serving layer describes its pools as
+  :class:`~repro.core.placement.StreamGeometry` values.
+* :mod:`~repro.core.trace` — the measured access stream: the engine
+  logs which pages each decode step touched into a
+  :class:`~repro.core.trace.PageAccessTrace`; ``window_masks(trace,
+  placement)`` turns trace x placement into per-window touched-row
+  bitmaps, and :func:`~repro.core.refresh_sim.simulate_trace` replays
+  them through the same row-state machine as the affine simulator.
+
+The bridge between the two worlds is the equivalence contract:
+``simulate_trace`` on :func:`~repro.core.trace.affine_masks` reproduces
+:func:`~repro.core.refresh_sim.simulate` exactly (pinned by
+``tests/test_trace_sim.py``), so trace-driven and closed-form numbers
+are directly comparable — which is what lets a live serve's trace stand
+in for the paper's analytic workloads on the Fig. 10 axes
+(``benchmarks/fig10_trace.py``).
+"""

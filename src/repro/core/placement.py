@@ -1,0 +1,263 @@
+"""DRAM data-mapping policies: cache pages -> module banks/rows.
+
+The paper treats the DRAM row as the refresh granule; *which* rows a
+workload touches therefore depends on how its data is mapped onto the
+module — a policy axis the paper leaves to the memory controller and
+that PENDRAM/DRMap (PAPERS.md) make explicit.  This module is that
+policy layer for the serving stack: a :class:`Placement` assigns every
+physical page of every :class:`repro.serve.paging.PageTable` pool
+stream (plus the resident weight region) a row interval on a
+:class:`repro.core.dram.DRAMSpec`, so the engine's per-step page-access
+trace (:mod:`repro.core.trace`) converts into per-window touched-row
+bitmaps that :func:`repro.core.refresh_sim.simulate_trace` consumes.
+
+Policies (``PLACEMENT_POLICIES``):
+
+* ``"row-major"`` — streams laid out sequentially, pages back to back
+  (one global byte cursor).  Sub-row pages share rows; a stream's pool
+  occupies one contiguous row run.  The locality baseline.
+* ``"bank-interleaved"`` — DRMap/PENDRAM-style mapping: consecutive
+  pool pages round-robin across the module's ``n_banks * n_channels``
+  banks (each bank packs its own pages back to back in its private row
+  span).  Buys bank-level parallelism at the cost of spreading the
+  allocation across the whole module — the PAAR bound then covers every
+  bank's partial span, which is exactly the trade the trace-driven
+  comparison quantifies.
+* ``"slot-colocated"`` — refresh-aware packing: pages with equal
+  per-shard *local index* across ALL streams are placed adjacently.
+  The allocator's per-stream free lists move in lockstep (same pop
+  pattern for the same admission sequence), so equal local indices
+  across streams belong to the same batch slot — this policy therefore
+  packs one slot's pages (every layer's KV page + its state pages) into
+  the fewest rows, minimizing the distinct rows a decode step touches.
+
+A placement is geometry only — no jax, no engine state.  The serving
+layer builds :class:`StreamGeometry` descriptors from its page table
+(:meth:`repro.serve.paging.PageTable.stream_geometries`) and this
+module never imports serve code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dram import DRAMSpec
+
+__all__ = ["PLACEMENT_POLICIES", "Placement", "PlacementError",
+           "StreamGeometry", "build_placement", "fitting_spec"]
+
+PLACEMENT_POLICIES = ("row-major", "bank-interleaved", "slot-colocated")
+
+
+class PlacementError(ValueError):
+    """A placement that does not fit the module — raised with the bank/
+    stream and the byte shortfall named, never silently wrapped."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamGeometry:
+    """Placement-relevant shape of one page-pool stream.
+
+    ``n_pages`` is the pool extent *including* the per-shard reserved
+    (ZERO/DUMP) pages; ``page_bytes`` the DRAM bytes one pool page
+    holds (grouped KV streams stack their group's layers into one page
+    id, so the stacked bytes ride in ``page_bytes``).
+    """
+
+    name: str
+    n_pages: int
+    page_bytes: int
+    shards: int = 1
+    reserved_per_shard: int = 0
+
+    def __post_init__(self):
+        if self.n_pages < 1 or self.page_bytes < 1:
+            raise ValueError(
+                f"stream {self.name!r}: n_pages={self.n_pages} and "
+                f"page_bytes={self.page_bytes} must be >= 1")
+        if self.shards < 1 or self.n_pages % self.shards:
+            raise ValueError(
+                f"stream {self.name!r}: n_pages={self.n_pages} must split "
+                f"evenly over shards={self.shards}")
+
+    @property
+    def ext(self) -> int:
+        """Per-shard pool extent (pages)."""
+        return self.n_pages // self.shards
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Pages -> rows for one (policy, spec, stream set) triple.
+
+    ``first_row[si][pid]`` / ``last_row[si][pid]`` bound (inclusive)
+    the rows page ``pid`` of stream ``si`` occupies; the weight region
+    spans rows ``[param_lo, param_hi)`` and is re-streamed every decode
+    step.  ``alloc_lo``/``alloc_hi`` bound every mapped row — the PAAR
+    allocation the refresh policies confine explicit refresh to.
+    """
+
+    policy: str
+    spec: DRAMSpec
+    streams: Tuple[StreamGeometry, ...]
+    param_lo: int
+    param_hi: int
+    first_row: Tuple[np.ndarray, ...]
+    last_row: Tuple[np.ndarray, ...]
+    alloc_lo: int
+    alloc_hi: int
+
+    @property
+    def alloc_rows(self) -> int:
+        return self.alloc_hi - self.alloc_lo
+
+    def page_rows(self, stream_idx: int, page_id: int) -> Tuple[int, int]:
+        """(first_row, last_row) of one page, both inclusive."""
+        return (int(self.first_row[stream_idx][page_id]),
+                int(self.last_row[stream_idx][page_id]))
+
+    def touch(self, row_mask: np.ndarray, stream_idx: int,
+              page_ids: Sequence[int]) -> None:
+        """Mark every row the given pages occupy in a [n_rows] bool mask."""
+        fr, lr = self.first_row[stream_idx], self.last_row[stream_idx]
+        for pid in page_ids:
+            row_mask[fr[pid]:lr[pid] + 1] = True
+
+    def touch_params(self, row_mask: np.ndarray) -> None:
+        row_mask[self.param_lo:self.param_hi] = True
+
+    def rows_used(self) -> int:
+        """Distinct rows the mapping occupies (params + every page)."""
+        mask = np.zeros((self.spec.n_rows,), bool)
+        self.touch_params(mask)
+        for si, g in enumerate(self.streams):
+            self.touch(mask, si, range(g.n_pages))
+        return int(mask.sum())
+
+
+def _unit_order(policy: str, streams: Sequence[StreamGeometry]):
+    """Yield (stream_idx, page_id) in the policy's packing order."""
+    if policy == "slot-colocated":
+        units = []
+        for si, g in enumerate(streams):
+            for pid in range(g.n_pages):
+                shard, local = divmod(pid, g.ext)
+                units.append((shard, local, si, pid))
+        # reserved pages hold the smallest local indices, so (shard,
+        # local, stream) ordering groups each shard's reserved pages
+        # first, then interleaves the streams at equal local index —
+        # the lockstep-free-list co-location argument (module docstring)
+        units.sort()
+        for _, _, si, pid in units:
+            yield si, pid
+    else:   # row-major and bank-interleaved share the sequential order
+        for si, g in enumerate(streams):
+            for pid in range(g.n_pages):
+                yield si, pid
+
+
+def build_placement(policy: str, spec: DRAMSpec,
+                    streams: Sequence[StreamGeometry], *,
+                    param_bytes: int = 0) -> Placement:
+    """Map a weight region + every stream's pages onto ``spec``'s rows.
+
+    The weight region (``param_bytes``, may be 0) always occupies the
+    lowest rows — weights are re-streamed every step under every
+    policy, so their rows are touched every window regardless of how
+    pool pages are interleaved around them.
+    """
+    if policy not in PLACEMENT_POLICIES:
+        raise PlacementError(
+            f"unknown placement policy {policy!r}; "
+            f"choose one of {PLACEMENT_POLICIES}")
+    streams = tuple(streams)
+    if len({g.shards for g in streams}) > 1:
+        raise PlacementError(
+            f"streams disagree on shard count: "
+            f"{ {g.name: g.shards for g in streams} }")
+    row_b = spec.row_bytes
+    n_rows = spec.n_rows
+    param_rows = -(-int(param_bytes) // row_b) if param_bytes else 0
+    if param_rows > n_rows:
+        raise PlacementError(
+            f"weight region needs {param_rows} rows but the module has "
+            f"{n_rows}")
+    first = [np.zeros((g.n_pages,), np.int64) for g in streams]
+    last = [np.zeros((g.n_pages,), np.int64) for g in streams]
+
+    if policy == "bank-interleaved":
+        B = spec.n_banks * spec.n_channels
+        rpb = spec.rows_per_bank
+        if rpb < 1:
+            raise PlacementError(
+                f"module has {n_rows} rows over {B} banks — no full bank "
+                f"row span to interleave into")
+        # bank b's private row span is [b*rpb, (b+1)*rpb); the weight
+        # region fills the low banks row-major, so each bank's byte
+        # cursor starts past its share of the weight rows
+        cursor = [min(rpb, max(0, param_rows - b * rpb)) * row_b
+                  for b in range(B)]
+        for i, (si, pid) in enumerate(_unit_order(policy, streams)):
+            b = i % B
+            pb = streams[si].page_bytes
+            lo, hi = cursor[b], cursor[b] + pb - 1
+            if hi // row_b >= rpb:
+                raise PlacementError(
+                    f"bank-interleaved: bank {b} overflows its {rpb}-row "
+                    f"span placing page {pid} of stream "
+                    f"{streams[si].name!r} ({pb} bytes at bank offset "
+                    f"{lo}); use a larger module (fitting_spec sizes one)")
+            first[si][pid] = b * rpb + lo // row_b
+            last[si][pid] = b * rpb + hi // row_b
+            cursor[b] = hi + 1
+    else:
+        cursor = param_rows * row_b
+        for si, pid in _unit_order(policy, streams):
+            pb = streams[si].page_bytes
+            lo, hi = cursor, cursor + pb - 1
+            if hi // row_b >= n_rows:
+                raise PlacementError(
+                    f"{policy}: module of {n_rows} rows overflows placing "
+                    f"page {pid} of stream {streams[si].name!r} "
+                    f"({pb} bytes at byte offset {lo}); use a larger "
+                    f"module (fitting_spec sizes one)")
+            first[si][pid] = lo // row_b
+            last[si][pid] = hi // row_b
+            cursor = hi + 1
+
+    lows = [int(f.min()) for f in first if f.size]
+    highs = [int(l.max()) for l in last if l.size]
+    alloc_lo = min([0] if param_rows else lows) if (param_rows or lows) else 0
+    alloc_hi = max([param_rows] + [h + 1 for h in highs])
+    return Placement(
+        policy=policy, spec=spec, streams=streams,
+        param_lo=0, param_hi=param_rows,
+        first_row=tuple(first), last_row=tuple(last),
+        alloc_lo=alloc_lo, alloc_hi=alloc_hi)
+
+
+def fitting_spec(streams: Sequence[StreamGeometry], *,
+                 param_bytes: int = 0, row_bytes: int = 2048,
+                 n_banks: int = 8, n_channels: int = 2,
+                 **spec_kw) -> DRAMSpec:
+    """Smallest module (whole bank row spans) every policy fits on.
+
+    Sized so the worst bank load of the interleaved policy — the full
+    weight region landing in one bank plus that bank's share of the
+    pool pages — still fits its row span; the sequential policies need
+    strictly fewer rows.  Meant for trace-scale studies where the
+    module is sized to the (smoke) pools, not a canonical 2/4/8 GB
+    part.
+    """
+    streams = tuple(streams)
+    B = n_banks * n_channels
+    param_rows = -(-int(param_bytes) // row_bytes) if param_bytes else 0
+    bank_bytes = [0] * B
+    for i, (si, pid) in enumerate(_unit_order("bank-interleaved", streams)):
+        bank_bytes[i % B] += streams[si].page_bytes
+    rpb = param_rows + max(-(-b // row_bytes) for b in bank_bytes) + 1
+    return DRAMSpec(capacity_bytes=B * rpb * row_bytes,
+                    row_bytes=row_bytes, n_banks=n_banks,
+                    n_channels=n_channels, **spec_kw)

@@ -28,7 +28,7 @@ from repro.core.dram import DRAMSpec
 from repro.core.energy import DEFAULT_PARAMS, EnergyParams
 from repro.core.rtc import Variant
 
-__all__ = ["SimResult", "simulate"]
+__all__ = ["SimResult", "simulate", "simulate_trace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +74,34 @@ def _policy_bounds(
     raise ValueError(variant)
 
 
+def _refresh_bounds(
+    spec: DRAMSpec,
+    variant: Variant,
+    *,
+    alloc_lo: int,
+    alloc_hi: int,
+    matched: bool,
+    bank_rounded: bool,
+) -> Tuple[int, int, bool]:
+    """Resolve the explicit-refresh predicate for one policy run.
+
+    Bank rounding widens only the *explicit-refresh predicate* (PASR
+    granularity: the policy refreshes whole banks).  The access stream
+    and the integrity/violation domain are the workload's, and the
+    workload still touches exactly its original allocation — sweeping
+    the rounded span would credit implicit refreshes to rows the
+    application never allocated.
+    """
+    n_rows = spec.n_rows
+    if bank_rounded:
+        span = max(1, spec.rows_per_bank)
+        bound_lo = (alloc_lo // span) * span
+        bound_hi = min(n_rows, -(-alloc_hi // span) * span)
+    else:
+        bound_lo, bound_hi = alloc_lo, alloc_hi
+    return _policy_bounds(variant, n_rows, bound_lo, bound_hi, matched)
+
+
 def simulate(
     spec: DRAMSpec,
     variant: Variant,
@@ -99,20 +127,10 @@ def simulate(
     alloc_hi = alloc_lo + alloc_rows
     if alloc_hi > n_rows:
         raise ValueError("allocation exceeds module")
-    # Bank rounding widens only the *explicit-refresh predicate* (PASR
-    # granularity: the policy refreshes whole banks).  The access stream
-    # and the integrity/violation domain are the workload's, and the
-    # workload still touches exactly its original allocation — sweeping
-    # the rounded span would credit implicit refreshes to rows the
-    # application never allocated.
-    if bank_rounded:
-        span = max(1, spec.rows_per_bank)
-        bound_lo = (alloc_lo // span) * span
-        bound_hi = min(n_rows, -(-alloc_hi // span) * span)
-    else:
-        bound_lo, bound_hi = alloc_lo, alloc_hi
     matched = rows_accessed_per_window >= n_rows
-    ref_lo, ref_hi, skip = _policy_bounds(variant, n_rows, bound_lo, bound_hi, matched)
+    ref_lo, ref_hi, skip = _refresh_bounds(
+        spec, variant, alloc_lo=alloc_lo, alloc_hi=alloc_hi,
+        matched=matched, bank_rounded=bank_rounded)
 
     def step(carry, _):
         age, cursor = carry
@@ -121,6 +139,12 @@ def simulate(
             ref_lo, ref_hi, skip, backend=backend,
         )
         span = max(1, alloc_hi - alloc_lo)
+        # Oversized access counts saturate rather than alias: the kernel
+        # marks row r accessed iff mod(r - cursor, span) < acc_len, and
+        # for acc_len >= span that holds for EVERY allocated row (the
+        # modulo distance is always < span), so one window covers the
+        # whole allocation no matter where the % below parks the cursor.
+        # Audited + pinned by test_oversized_access_saturates_allocation.
         cursor = alloc_lo + (cursor - alloc_lo + rows_accessed_per_window) % span
         return (new_age, cursor), jnp.stack(
             [jnp.asarray(imp, jnp.int32), jnp.asarray(exp, jnp.int32),
@@ -130,6 +154,81 @@ def simulate(
     age0 = jnp.zeros((n_rows,), jnp.int32)
     (_, _), counts = jax.lax.scan(
         step, (age0, jnp.asarray(alloc_lo, jnp.int32)), None, length=n_windows
+    )
+    counts = np.asarray(counts, dtype=np.int64).sum(axis=0)
+    implicit, explicit, violations = (int(c) for c in counts)
+
+    e_ref = explicit * params.e_ref_row
+    e_base = n_rows * n_windows * params.e_ref_row
+    return SimResult(
+        variant=variant,
+        n_windows=n_windows,
+        n_rows=n_rows,
+        implicit_refreshes=implicit,
+        explicit_refreshes=explicit,
+        violations=violations,
+        refresh_energy_j=e_ref,
+        baseline_refresh_energy_j=e_base,
+    )
+
+
+def simulate_trace(
+    spec: DRAMSpec,
+    variant: Variant,
+    *,
+    masks: np.ndarray,          # bool [n_windows, n_rows]: touched rows
+    alloc_lo: int,
+    alloc_rows: int,
+    params: EnergyParams = DEFAULT_PARAMS,
+    backend: str = "ref",
+    bank_rounded: bool = False,
+    matched: "bool | None" = None,
+) -> SimResult:
+    """Replay a measured access stream through the same row-state machine.
+
+    ``masks`` is the per-window touched-rows bitmap a live trace implies
+    under a placement (:func:`repro.core.trace.window_masks`), or the
+    affine cursor's own bitmap (:func:`repro.core.trace.affine_masks`) —
+    on the latter this reproduces :func:`simulate` exactly, which is the
+    pinned equivalence contract (``tests/test_trace_sim.py``).
+
+    ``matched`` feeds MIN_RTC's conservative all-or-nothing gate.  The
+    affine model decides it from the access *rate* (``acc >= n_rows``),
+    which a bitmap cannot express once ``alloc_rows < n_rows``; the
+    default derives the only trace-expressible analogue — every row of
+    the module touched in every window — and equivalence tests pass the
+    affine value explicitly.
+    """
+    from repro.kernels.refresh_sim.ops import window_update_masked
+
+    n_rows = spec.n_rows
+    alloc_hi = alloc_lo + alloc_rows
+    if alloc_hi > n_rows:
+        raise ValueError("allocation exceeds module")
+    masks = np.asarray(masks)
+    if masks.ndim != 2 or masks.shape[1] != n_rows:
+        raise ValueError(
+            f"masks shape {masks.shape} != (n_windows, {n_rows})")
+    n_windows = masks.shape[0]
+    if matched is None:
+        matched = bool(masks.all()) if masks.size else False
+    ref_lo, ref_hi, skip = _refresh_bounds(
+        spec, variant, alloc_lo=alloc_lo, alloc_hi=alloc_hi,
+        matched=matched, bank_rounded=bank_rounded)
+
+    def step(age, touched):
+        new_age, imp, exp, vio = window_update_masked(
+            age, touched, alloc_lo, alloc_hi, ref_lo, ref_hi, skip,
+            backend=backend,
+        )
+        return new_age, jnp.stack(
+            [jnp.asarray(imp, jnp.int32), jnp.asarray(exp, jnp.int32),
+             jnp.asarray(vio, jnp.int32)]
+        )
+
+    age0 = jnp.zeros((n_rows,), jnp.int32)
+    _, counts = jax.lax.scan(
+        step, age0, jnp.asarray(masks, jnp.int32), length=n_windows
     )
     counts = np.asarray(counts, dtype=np.int64).sum(axis=0)
     implicit, explicit, violations = (int(c) for c in counts)

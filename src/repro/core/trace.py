@@ -1,88 +1,156 @@
-"""Workload profiles for the assigned LM architectures (beyond-paper).
+"""Page-access traces: the serving loop's measured access stream.
 
-The paper derives DRAM profiles from CNN frame loops; modern serving
-and training loops have exactly the *pseudo-stationary spatio-temporal
-access pattern* RTC targets (Section III-A): every step re-streams the
-(active) weights and touches the optimizer state / KV cache in a fixed
-order.  This module converts a :class:`ModelConfig` + shape into the
-:class:`WorkloadProfile` the RTC engine consumes, so
-``benchmarks/lm_rtc.py`` can quantify RTC savings for all 10 archs —
-e.g. an accelerator whose weights live in LPDDR-class memory (edge
-serving), the regime where the paper's mechanism directly applies.
+:mod:`repro.core.refresh_sim` originally consumed only an *analytic*
+access model — an affine cursor sweeping ``rows_accessed_per_window``
+rows derived from a :class:`repro.core.workload.WorkloadProfile`.  This
+module is the measured counterpart: the engine
+(:class:`repro.serve.engine.ServeEngine`) records, per decode step,
+exactly which physical pages of each pool stream it read or wrote
+(KV sweeps + appends, state reads/writes, page-in/out moves) into a
+:class:`PageAccessTrace` hanging off its telemetry sink; a
+:class:`repro.core.placement.Placement` then converts page ids into
+DRAM rows, yielding the per-window touched-rows bitmaps that
+:func:`repro.core.refresh_sim.simulate_trace` replays.
 
-Step period defaults to the dry-run roofline bound when available
-(``step_time_s``), tying the RTC study to the measured system.
+Token *values* never enter the trace — page accesses are determined by
+context lengths and scheduling alone, so a trace from fixed prompts is
+deterministic and its derived refresh counts are pinnable.
+
+:func:`affine_masks` generates the bitmap the affine cursor would have
+produced, giving the equivalence bridge: ``simulate_trace`` on
+``affine_masks(...)`` must reproduce ``simulate(...)`` exactly (see
+``tests/test_trace_sim.py``).
+
+(The LM phase profiles that used to live here moved to
+:func:`repro.core.workload.lm_workload`, next to the profile dataclass
+they build.)
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Sequence, Tuple
 
-from repro.core.workload import WorkloadProfile
-from repro.models.config import ModelConfig
+import numpy as np
 
-__all__ = ["lm_workload"]
+from repro.core.placement import Placement
 
-BYTES_PER_PARAM = 2     # bf16 weights
-BYTES_PER_OPT = 8       # f32 m + v (per param)
+__all__ = ["PageAccessTrace", "TraceStep", "affine_masks", "window_masks"]
 
 
-def lm_workload(
-    cfg: ModelConfig,
-    kind: str,                 # "train" | "decode"
-    step_time_s: float,
-    *,
-    global_batch: int = 1,
-    seq_len: int = 0,
-    row_utilization: float = 1.0,   # weight streaming is fully sequential
-) -> WorkloadProfile:
-    """Phase-level DRAM profile of one train/decode step.
+@dataclasses.dataclass(frozen=True)
+class TraceStep:
+    """One decode step's page touches.
 
-    train:  read weights + opt state, write weights + opt state
-            (every step touches the full resident set — RTT-ideal).
-    decode: read *active* weights + the KV cache, append one token of KV
-            (MoE: inactive experts are resident but untouched ->
-            Algorithm-1 partial-coverage regime, the paper's most
-            interesting case).
+    ``accesses`` maps stream index -> the (sorted, deduplicated) page
+    ids the step read or wrote in that stream; ``param_read`` marks a
+    step that re-streamed the resident weights (every real decode step
+    does — False only for bookkeeping flushes like end-of-serve
+    page-out records).
     """
-    n_total = cfg.param_counts()["total"]
-    n_active = cfg.active_param_counts()
-    w_bytes = n_total * BYTES_PER_PARAM
 
-    if kind == "train":
-        opt_bytes = n_total * BYTES_PER_OPT
-        footprint = w_bytes + opt_bytes
-        reads = w_bytes + opt_bytes
-        writes = w_bytes + opt_bytes
-    elif kind == "decode":
-        kv_token = _kv_bytes_per_token(cfg)
-        kv_bytes = kv_token * global_batch * max(seq_len, 1)
-        footprint = w_bytes + kv_bytes
-        reads = n_active * BYTES_PER_PARAM + kv_bytes
-        writes = kv_token * global_batch
-    else:
-        raise ValueError(kind)
-
-    return WorkloadProfile(
-        name=f"{cfg.name}/{kind}",
-        footprint_bytes=int(footprint),
-        iter_period_s=step_time_s,
-        read_bytes_per_iter=float(reads),
-        write_bytes_per_iter=float(writes),
-        regular=True,
-        row_utilization=row_utilization,
-    )
+    accesses: Tuple[Tuple[int, Tuple[int, ...]], ...]
+    param_read: bool = True
 
 
-def _kv_bytes_per_token(cfg: ModelConfig) -> int:
-    """Per-token recurrent/KV state bytes across the stack."""
-    total = 0
-    for i in range(cfg.n_layers):
-        kind = cfg.layer_kind(i)
-        if kind == "global":
-            total += 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
-        elif kind == "local":
-            # bounded window: amortized per-token cost is the same
-            # write traffic; reads bounded by the window
-            total += 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
-        # ssm / rglru carry O(1) state: no per-token growth
-    return total
+class PageAccessTrace:
+    """Append-only per-step page-access log for one serve() call.
+
+    Stream indices refer to ``stream_names`` (the page table's
+    :meth:`~repro.serve.paging.PageTable.stream_names` order); the
+    engine validates the binding before recording.
+    """
+
+    def __init__(self, stream_names: Sequence[str]):
+        self.stream_names: Tuple[str, ...] = tuple(stream_names)
+        self.steps: list[TraceStep] = []
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+    def record_step(self, accesses, *, param_read: bool = True) -> None:
+        """Record one step; ``accesses`` is {stream_idx: iterable of page
+        ids} or an iterable of (stream_idx, page_ids) pairs."""
+        if hasattr(accesses, "items"):
+            accesses = accesses.items()
+        norm = []
+        for si, pids in sorted(accesses):
+            si = int(si)
+            if not 0 <= si < len(self.stream_names):
+                raise ValueError(
+                    f"stream index {si} out of range for streams "
+                    f"{self.stream_names}")
+            pids = tuple(sorted({int(p) for p in pids}))
+            if pids:
+                norm.append((si, pids))
+        self.steps.append(TraceStep(tuple(norm), bool(param_read)))
+
+    def pages_touched(self) -> Tuple[int, ...]:
+        """Distinct pages ever touched, per stream."""
+        seen = [set() for _ in self.stream_names]
+        for step in self.steps:
+            for si, pids in step.accesses:
+                seen[si].update(pids)
+        return tuple(len(s) for s in seen)
+
+
+def window_masks(trace: PageAccessTrace, placement: Placement, *,
+                 steps_per_window: int = 1) -> np.ndarray:
+    """Trace × placement -> per-window touched-rows bitmap.
+
+    Returns bool ``[n_windows, spec.n_rows]``; window ``w`` covers trace
+    steps ``[w*steps_per_window, (w+1)*steps_per_window)`` (the caller
+    picks the step-to-retention-window ratio from measured step time vs
+    ``spec.effective_retention_s``; the last window keeps any remainder
+    steps).  Weight rows are marked for any window containing a
+    ``param_read`` step.
+    """
+    if tuple(trace.stream_names) != tuple(
+            g.name for g in placement.streams):
+        raise ValueError(
+            f"trace streams {trace.stream_names} do not match placement "
+            f"streams {tuple(g.name for g in placement.streams)}")
+    if steps_per_window < 1:
+        raise ValueError(f"steps_per_window={steps_per_window} must be >= 1")
+    n_steps = trace.n_steps
+    n_windows = max(1, n_steps // steps_per_window)
+    masks = np.zeros((n_windows, placement.spec.n_rows), bool)
+    for i, step in enumerate(trace.steps):
+        w = min(i // steps_per_window, n_windows - 1)
+        if step.param_read:
+            placement.touch_params(masks[w])
+        for si, pids in step.accesses:
+            placement.touch(masks[w], si, pids)
+    return masks
+
+
+def affine_masks(n_rows: int, *, alloc_lo: int, alloc_rows: int,
+                 rows_accessed_per_window: int, n_windows: int,
+                 ) -> np.ndarray:
+    """The affine cursor's touched-rows bitmap, window by window.
+
+    Replicates :func:`repro.core.refresh_sim.simulate`'s access model
+    bit-exactly: a cursor starting at ``alloc_lo`` sweeps
+    ``rows_accessed_per_window`` consecutive rows (wrapping inside the
+    allocation span) each window, then advances modulo
+    ``span = max(1, alloc_rows)``.  When the per-window access count
+    meets or exceeds the span the whole allocation is touched — the
+    saturation case the cursor's modulo arithmetic also lands on.
+    """
+    if not (0 <= alloc_lo and alloc_lo + alloc_rows <= n_rows):
+        raise ValueError(
+            f"allocation [{alloc_lo}, {alloc_lo + alloc_rows}) outside "
+            f"module of {n_rows} rows")
+    span = max(1, alloc_rows)
+    acc = max(0, int(rows_accessed_per_window))
+    masks = np.zeros((n_windows, n_rows), bool)
+    cursor = 0
+    for w in range(n_windows):
+        if alloc_rows > 0 and acc > 0:
+            if acc >= span:
+                sel = np.arange(span)
+            else:
+                sel = (cursor + np.arange(acc)) % span
+            masks[w, alloc_lo + sel] = True
+        cursor = (cursor + acc) % span
+    return masks

@@ -22,8 +22,16 @@ from typing import Optional
 
 from repro.core.cnn_zoo import CNNProfile
 from repro.core.dram import DRAMSpec
+from repro.models.config import ModelConfig
 
-__all__ = ["WorkloadProfile", "from_cnn", "from_decode", "merge"]
+__all__ = ["WorkloadProfile", "WorkloadError", "from_cnn", "from_decode",
+           "lm_workload", "merge"]
+
+
+class WorkloadError(ValueError):
+    """A workload description that cannot be accounted — raised with the
+    offending quantity named (e.g. a decode profile claiming zero cached
+    context), instead of silently clamping it to something billable."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,10 +149,29 @@ def merge(name: str, *workloads: WorkloadProfile) -> WorkloadProfile:
     refresher of its own data); regular only if all parts are regular
     (Section III-E maps apps to disjoint banks, preserving regularity —
     we model the aggregate stream).
+
+    ``row_utilization`` combines byte-weighted: the merged profile's ACT
+    rate must equal the sum of the components' ACT rates (each stream
+    still opens its own rows at its own utilization), and since ACT rate
+    is ``traffic / (row_bytes * utilization)``, the utilization that
+    preserves the aggregate is the traffic-weighted *harmonic* mean.
+    The previous ``min()`` billed every higher-utilization component at
+    the worst stream's row efficiency, overstating the mix's ACT rate —
+    and with it the implicit-refresh credit — whenever utilizations
+    differed.  (The pinned fig11 mixes all run the paper-consistent CNN
+    default of 0.5, for which the weighted mean is exactly 0.5, so their
+    calibration values are unchanged by this fix.)
     """
     if not workloads:
         raise ValueError("need at least one workload")
     period = max(w.iter_period_s for w in workloads)
+    traffic = [w.traffic_bytes_per_s for w in workloads]
+    total = sum(traffic)
+    if total > 0:
+        row_util = total / sum(t / w.row_utilization
+                               for t, w in zip(traffic, workloads))
+    else:
+        row_util = min(w.row_utilization for w in workloads)
     return WorkloadProfile(
         name=name,
         footprint_bytes=sum(w.footprint_bytes for w in workloads),
@@ -156,5 +183,86 @@ def merge(name: str, *workloads: WorkloadProfile) -> WorkloadProfile:
             w.write_bytes_per_iter * period / w.iter_period_s for w in workloads
         ),
         regular=all(w.regular for w in workloads),
-        row_utilization=min(w.row_utilization for w in workloads),
+        row_utilization=row_util,
     )
+
+
+# ---------------------------------------------------------------------------
+# LM phase profiles (beyond-paper): ModelConfig -> WorkloadProfile
+# ---------------------------------------------------------------------------
+BYTES_PER_PARAM = 2     # bf16 weights
+BYTES_PER_OPT = 8       # f32 m + v (per param)
+
+
+def lm_workload(
+    cfg: ModelConfig,
+    kind: str,                 # "train" | "decode"
+    step_time_s: float,
+    *,
+    global_batch: int = 1,
+    seq_len: int = 0,
+    row_utilization: float = 1.0,   # weight streaming is fully sequential
+) -> WorkloadProfile:
+    """Phase-level DRAM profile of one train/decode step.
+
+    train:  read weights + opt state, write weights + opt state
+            (every step touches the full resident set — RTT-ideal).
+    decode: read *active* weights + the KV cache, append one token of KV
+            (MoE: inactive experts are resident but untouched ->
+            Algorithm-1 partial-coverage regime, the paper's most
+            interesting case).  ``seq_len`` is the cached context the
+            step attends over and must be >= 1 — a decode step always
+            has at least the token it was sampled from.  It used to be
+            silently clamped (``max(seq_len, 1)``), which billed one
+            token of KV sweep/footprint for a context the caller said
+            did not exist; now a :class:`WorkloadError` names the bad
+            value instead of inventing traffic.
+    """
+    n_total = cfg.param_counts()["total"]
+    n_active = cfg.active_param_counts()
+    w_bytes = n_total * BYTES_PER_PARAM
+
+    if kind == "train":
+        opt_bytes = n_total * BYTES_PER_OPT
+        footprint = w_bytes + opt_bytes
+        reads = w_bytes + opt_bytes
+        writes = w_bytes + opt_bytes
+    elif kind == "decode":
+        if seq_len < 1:
+            raise WorkloadError(
+                f"lm_workload({cfg.name!r}, 'decode'): seq_len={seq_len} "
+                f"but a decode step attends over at least 1 cached token; "
+                f"pass the real context length instead of relying on the "
+                f"old max(seq_len, 1) clamp")
+        kv_token = _kv_bytes_per_token(cfg)
+        kv_bytes = kv_token * global_batch * seq_len
+        footprint = w_bytes + kv_bytes
+        reads = n_active * BYTES_PER_PARAM + kv_bytes
+        writes = kv_token * global_batch
+    else:
+        raise ValueError(kind)
+
+    return WorkloadProfile(
+        name=f"{cfg.name}/{kind}",
+        footprint_bytes=int(footprint),
+        iter_period_s=step_time_s,
+        read_bytes_per_iter=float(reads),
+        write_bytes_per_iter=float(writes),
+        regular=True,
+        row_utilization=row_utilization,
+    )
+
+
+def _kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """Per-token recurrent/KV state bytes across the stack."""
+    total = 0
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "global":
+            total += 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+        elif kind == "local":
+            # bounded window: amortized per-token cost is the same
+            # write traffic; reads bounded by the window
+            total += 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+        # ssm / rglru carry O(1) state: no per-token growth
+    return total

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["window_update_ref"]
+__all__ = ["window_update_masked_ref", "window_update_ref"]
 
 
 def window_update_ref(
@@ -41,6 +41,41 @@ def window_update_ref(
     in_alloc = (row_ids >= alloc_lo) & (row_ids < alloc_hi)
     off = jnp.mod(rel - jnp.mod(acc_start - alloc_lo, alloc_span), alloc_span)
     accessed = in_alloc & (off < acc_len)
+
+    in_ref_bound = (row_ids >= ref_lo) & (row_ids < ref_hi)
+    explicit = in_ref_bound & jnp.where(skip_accessed, ~accessed, True)
+
+    replenished = accessed | explicit
+    new_age = jnp.where(replenished, 0, age + 1)
+    violation = in_alloc & (new_age > 1)
+    return (
+        new_age.astype(age.dtype),
+        accessed.astype(jnp.int32),
+        explicit.astype(jnp.int32),
+        violation.astype(jnp.int32),
+    )
+
+
+def window_update_masked_ref(
+    age: jnp.ndarray,          # [n_rows] int32: windows since last replenish
+    row_ids: jnp.ndarray,      # [n_rows] int32: absolute row indices
+    touched: jnp.ndarray,      # [n_rows] bool/int: rows accessed this window
+    alloc_lo: jnp.ndarray,     # scalar int32
+    alloc_hi: jnp.ndarray,     # scalar int32 (exclusive)
+    ref_lo: jnp.ndarray,       # scalar int32: explicit-refresh bound lo
+    ref_hi: jnp.ndarray,       # scalar int32: explicit-refresh bound hi
+    skip_accessed: jnp.ndarray,  # scalar bool: RTT skips rows accessed now
+):
+    """Trace-driven variant of :func:`window_update_ref`.
+
+    Identical row-state machine, but the accessed set is an arbitrary
+    per-row bitmap (one retention window of a measured page-access
+    trace, via ``core.trace.window_masks``) instead of the affine
+    cursor's wrapped interval.  Touches outside the allocation are
+    ignored — a row with no live data replenishes nothing.
+    """
+    in_alloc = (row_ids >= alloc_lo) & (row_ids < alloc_hi)
+    accessed = in_alloc & (touched != 0)
 
     in_ref_bound = (row_ids >= ref_lo) & (row_ids < ref_hi)
     explicit = in_ref_bound & jnp.where(skip_accessed, ~accessed, True)

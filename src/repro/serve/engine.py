@@ -28,7 +28,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -873,7 +873,13 @@ class ServeEngine:
         optional sink with ``record_prefill(plen, dt, padded_len)`` /
         ``record_decode(ctx_lengths, dt)`` hooks — see
         :class:`repro.serve.telemetry.ServeTelemetry`; prefill traffic
-        is accounted from true prompt lengths, never padded ones.
+        is accounted from true prompt lengths, never padded ones.  A
+        sink carrying a ``trace``
+        (:class:`repro.core.trace.PageAccessTrace`) additionally gets
+        the per-step page-access stream of a *paged* engine: each
+        decode step records every pool page it read/wrote (KV sweeps +
+        appends, state pages), with admissions, restores, and page-out
+        reads folded into the step they precede.
         """
         if max_new_tokens < 0:
             raise ValueError("max_new_tokens must be >= 0")
@@ -912,6 +918,31 @@ class ServeEngine:
         B = self.max_batch
         paged = self._table is not None
         use_top_k = any(r.top_k != vocab for r in requests)
+
+        # Page-access trace: page ids are page-table state, so recording
+        # rides the host-side scheduling loop — nothing is added to the
+        # jitted steps.  Accesses that happen *between* decode steps
+        # (admission scatters, restore writes, offload reads) accumulate
+        # in pending_pages and fold into the next step's record.
+        trace = getattr(telemetry, "trace", None) if telemetry else None
+        if trace is not None:
+            if not paged:
+                raise ValueError(
+                    "telemetry.trace set but the engine is not paged — "
+                    "page-access traces need a PageTable (pass "
+                    "paged=PagedCacheConfig(...) at engine build)")
+            names = self._table.stream_names()
+            if tuple(trace.stream_names) != names:
+                raise ValueError(
+                    f"telemetry.trace streams {trace.stream_names} do not "
+                    f"match this engine's page table streams {names}")
+        pending_pages: Dict[int, set] = {}
+
+        def note_pages(s: int):
+            """Fold slot ``s``'s current page set into the next record."""
+            if trace is not None:
+                for si, pids in self._table.slot_page_ids(s):
+                    pending_pages.setdefault(si, set()).update(pids)
 
         def sample(logits, keys, temps_, topks_):
             return self._sample(logits, keys, temps_, topks_, use_top_k)
@@ -957,6 +988,7 @@ class ServeEngine:
             """Preempt a live slot: offload its pages to host."""
             nonlocal cache
             st = slots[victim]
+            note_pages(victim)   # offload reads every held page (before pop)
             cache, payload = self._table.offload(cache, victim, st.pos)
             suspended.append(_Suspended(st.req, st.pos, st.emitted, st.out,
                                         int(tok_vec[victim]), payload))
@@ -1009,6 +1041,7 @@ class ServeEngine:
                             break
                         suspended.popleft()
                         cache = self._table.restore(cache, s, sp.payload)
+                        note_pages(s)   # restore writes the new pages
                         st = _Slot(sp.req, pos=sp.pos, first_token=0)
                         st.out, st.emitted = sp.out, sp.emitted
                         occupy(s, st, sp.next_tok)
@@ -1029,6 +1062,7 @@ class ServeEngine:
                         jnp.asarray([plen], jnp.int32))
                     if paged:
                         cache = self._table.admit(cache, one, s, plen)
+                        note_pages(s)   # admission scatters the prefill
                     else:
                         cache = self._insert(cache, one,
                                              jnp.asarray(s, jnp.int32))
@@ -1068,6 +1102,16 @@ class ServeEngine:
                                      jnp.asarray(topk_vec)))
             if telemetry is not None:
                 telemetry.record_decode(ctx, time.perf_counter() - t0)
+            if trace is not None:
+                # one trace step per decode step: every active slot's
+                # resident pages (allocate-on-write: residency == the
+                # context this step's KV sweep reads; the append lands
+                # in the same set after grow()) plus whatever moved
+                # between steps, with the weights re-streamed.
+                for s in active:
+                    note_pages(s)
+                trace.record_step(pending_pages, param_read=True)
+                pending_pages.clear()
             for s in active:
                 st = slots[s]
                 token = int(toks[s])
@@ -1078,6 +1122,10 @@ class ServeEngine:
                 if finished(st, token):
                     retire(s)
             admit()
+        if trace is not None and pending_pages:
+            # trailing page moves with no decode step after them (e.g. a
+            # final admission that retired on its prefill token)
+            trace.record_step(pending_pages, param_read=False)
         return outputs  # type: ignore[return-value]
 
     # -------------------------------------------------------------- generate

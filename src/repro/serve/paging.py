@@ -419,6 +419,80 @@ class PageTable:
         return {st.where: sum(len(f) for f in st.free)
                 for st in self.streams}
 
+    # --------------------------------------------------- placement geometry
+    _ITEMSIZE = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+    def stream_name(self, si: int) -> str:
+        st = self.streams[si]
+        return f"{'state' if st.is_state else 'kv'}:{st.where[0]}{st.where[1]}"
+
+    def stream_names(self) -> Tuple[str, ...]:
+        """Stable stream labels, in stream-list order — the binding
+        contract between a :class:`repro.core.trace.PageAccessTrace`
+        and the :class:`repro.core.placement.StreamGeometry` set."""
+        return tuple(self.stream_name(si) for si in range(len(self.streams)))
+
+    def stream_geometries(self, cfg=None):
+        """Per-stream :class:`repro.core.placement.StreamGeometry` —
+        the DRAM shape of this table's pools.
+
+        A ``("groups", i)`` stream's page id indexes ``n_groups``
+        stacked per-layer pool pages at once (``init_paged_cache``
+        broadcasts the group's layers over one leading axis), so its
+        placement page carries the group's whole stack of bytes.
+
+        ``cfg`` overrides the model config for sizing (e.g. the full
+        arch while the engine serves the smoke twin); it must share the
+        smoke config's attn_pattern/pattern_tail structure or the
+        stream list would not line up.
+        """
+        from repro.core.placement import StreamGeometry
+
+        mcfg = self.cfg if cfg is None else cfg
+        if cfg is not None and (
+                tuple(mcfg.attn_pattern) != tuple(self.cfg.attn_pattern)
+                or tuple(mcfg.pattern_tail) != tuple(self.cfg.pattern_tail)):
+            raise ValueError(
+                f"stream_geometries: override config {mcfg.name!r} has "
+                f"pattern {mcfg.attn_pattern}/{mcfg.pattern_tail} but the "
+                f"table was built for {self.cfg.attn_pattern}/"
+                f"{self.cfg.pattern_tail}")
+        isz = self._ITEMSIZE[mcfg.dtype]
+        geoms = []
+        for si, st in enumerate(self.streams):
+            if st.is_state:
+                if st.kind == "ssm":
+                    pb = ((mcfg.ssm_conv - 1) * mcfg.d_inner * isz
+                          + mcfg.d_inner * mcfg.ssm_state * 4)
+                else:   # rglru: f32 hidden state rides beside the conv tap
+                    pb = ((mcfg.conv1d_width - 1) * mcfg.resolved_lru_width
+                          * isz + mcfg.resolved_lru_width * 4)
+            else:
+                pb = (2 * self.page_size * mcfg.n_kv_heads
+                      * mcfg.resolved_head_dim * isz)
+            if st.where[0] == "groups":
+                pb *= mcfg.n_groups
+            geoms.append(StreamGeometry(
+                name=self.stream_name(si), n_pages=st.n_pages,
+                page_bytes=int(pb), shards=st.shards,
+                reserved_per_shard=RESERVED_PAGES))
+        return tuple(geoms)
+
+    def slot_page_ids(self, slot: int) -> List[Tuple[int, Tuple[int, ...]]]:
+        """Physical pages ``slot`` holds right now, per stream — the
+        page set one decode step reads AND writes (allocate-on-write:
+        a resident page exists only because the slot's context reaches
+        into it, and the KV gather sweeps every resident page)."""
+        out = []
+        for si, st in enumerate(self.streams):
+            held = st.slot_pages.get(slot)
+            if held is None:
+                continue
+            pids = (held,) if st.is_state else tuple(held.values())
+            if pids:
+                out.append((si, pids))
+        return out
+
     # ------------------------------------------------------------ jitted ops
     def _insert_fn(self, cache, one, slot, pages, zeros, dumps):
         """Scatter a prefilled batch-1 contiguous cache into this

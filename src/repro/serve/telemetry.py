@@ -232,16 +232,24 @@ class ServeTelemetry:
     kernel path never materializes a view).  ``None`` (default) lets
     the engine set it via :meth:`configure_decode` at serve time;
     passing an explicit mode pins it (the engine will not override).
+
+    ``trace`` — an optional :class:`repro.core.trace.PageAccessTrace`
+    the engine appends per-step page accesses to (paged engines only;
+    the engine validates the stream binding at serve time).  Telemetry
+    itself never reads it: it is the hand-off point between the serving
+    loop and the trace-driven refresh simulation
+    (:func:`repro.core.refresh_sim.simulate_trace`).
     """
 
     _MODES = ("contiguous", "gather", "pallas_paged")
 
     def __init__(self, traffic: TrafficModel, ctx_scale: float = 1.0,
-                 decode_mode: Optional[str] = None):
+                 decode_mode: Optional[str] = None, trace=None):
         if decode_mode is not None and decode_mode not in self._MODES:
             raise ValueError(
                 f"decode_mode must be one of {self._MODES}, "
                 f"got {decode_mode!r}")
+        self.trace = trace
         self.traffic = traffic
         self.ctx_scale = float(ctx_scale)
         self._pinned_mode = decode_mode is not None

@@ -31,7 +31,13 @@ MIXES = {
     "2AN+2GN+LN": (("alexnet", 2), ("googlenet", 2), ("lenet", 1)),
 }
 
-# mix -> (full-RTC savings, SmartRefresh savings) current calibration
+# mix -> (full-RTC savings, SmartRefresh savings) current calibration.
+# Re-verified after PR 9's merge() fix (row_utilization is now the
+# traffic-weighted harmonic mean instead of a bare min): every CNN in
+# these mixes runs the from_cnn default row_utilization=0.5, and a
+# weighted harmonic mean of equal values is that value, so the pins are
+# unchanged — the fix only moves mixes whose members *differ* in
+# utilization (exercised in tests/test_workload.py).
 EXPECTED = {
     "LN": (0.975, -0.022),
     "GN": (0.906, -0.015),

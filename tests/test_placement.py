@@ -1,0 +1,130 @@
+"""Placement layer: geometry invariants across every mapping policy."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
+
+from repro.core.dram import DRAMSpec
+from repro.core.placement import (PLACEMENT_POLICIES, PlacementError,
+                                  StreamGeometry, build_placement,
+                                  fitting_spec)
+
+STREAMS = (
+    StreamGeometry("kv:groups0", n_pages=24, page_bytes=8192, shards=2,
+                   reserved_per_shard=2),
+    StreamGeometry("state:tail0", n_pages=12, page_bytes=640, shards=2,
+                   reserved_per_shard=2),
+)
+PARAM_BYTES = 50_000
+
+
+def test_stream_geometry_validation():
+    with pytest.raises(ValueError, match="n_pages"):
+        StreamGeometry("x", n_pages=0, page_bytes=1)
+    with pytest.raises(ValueError, match="shards"):
+        StreamGeometry("x", n_pages=5, page_bytes=1, shards=2)
+    assert StreamGeometry("x", n_pages=6, page_bytes=1, shards=2).ext == 3
+
+
+def test_unknown_policy_raises():
+    spec = fitting_spec(STREAMS, param_bytes=PARAM_BYTES)
+    with pytest.raises(PlacementError, match="unknown placement policy"):
+        build_placement("hashed", spec, STREAMS)
+
+
+@pytest.mark.parametrize("policy", PLACEMENT_POLICIES)
+def test_every_page_mapped_inside_module(policy):
+    """Core geometry contract: every page gets a non-empty in-bounds row
+    interval, disjoint streams never share a *byte* (row sharing between
+    consecutive sub-row pages is allowed), and the alloc bounds cover
+    params + every page."""
+    spec = fitting_spec(STREAMS, param_bytes=PARAM_BYTES)
+    pl = build_placement(policy, spec, STREAMS, param_bytes=PARAM_BYTES)
+    assert pl.param_lo == 0
+    assert pl.param_hi == -(-PARAM_BYTES // spec.row_bytes)
+    for si, g in enumerate(STREAMS):
+        for pid in range(g.n_pages):
+            lo, hi = pl.page_rows(si, pid)
+            assert 0 <= lo <= hi < spec.n_rows
+            # a page spans exactly the rows its byte size needs
+            assert hi - lo <= -(-g.page_bytes // spec.row_bytes)
+    assert 0 <= pl.alloc_lo < pl.alloc_hi <= spec.n_rows
+    mask = np.zeros((spec.n_rows,), bool)
+    pl.touch_params(mask)
+    for si, g in enumerate(STREAMS):
+        pl.touch(mask, si, range(g.n_pages))
+    assert not mask[:pl.alloc_lo].any()
+    assert not mask[pl.alloc_hi:].any()
+    assert pl.rows_used() == mask.sum()
+
+
+def test_row_major_is_contiguous_and_interleaved_is_spread():
+    spec = fitting_spec(STREAMS, param_bytes=PARAM_BYTES)
+    rm = build_placement("row-major", spec, STREAMS,
+                         param_bytes=PARAM_BYTES)
+    bi = build_placement("bank-interleaved", spec, STREAMS,
+                         param_bytes=PARAM_BYTES)
+    # row-major packs everything into one dense run from row 0
+    assert rm.alloc_lo == 0
+    assert rm.alloc_rows == rm.rows_used()
+    # interleaving spreads the same pages across every bank's row span,
+    # widening the PAAR allocation without using more rows
+    assert bi.alloc_rows > rm.alloc_rows
+    assert bi.rows_used() <= rm.rows_used() + spec.n_banks * spec.n_channels
+
+
+def test_slot_colocation_groups_equal_local_indices():
+    """Pages with equal per-shard local index across streams must land
+    closer together than row-major's stream-at-a-time packing puts
+    them (the refresh-aware co-location the policy exists for)."""
+    spec = fitting_spec(STREAMS, param_bytes=PARAM_BYTES)
+    rm = build_placement("row-major", spec, STREAMS,
+                         param_bytes=PARAM_BYTES)
+    sc = build_placement("slot-colocated", spec, STREAMS,
+                         param_bytes=PARAM_BYTES)
+
+    def spread(pl, local):
+        rows = []
+        for si, g in enumerate(STREAMS):
+            for shard in range(g.shards):
+                lo, hi = pl.page_rows(si, shard * g.ext + local)
+                rows += [lo, hi]
+        return max(rows) - min(rows)
+
+    locals_ = range(min(g.ext for g in STREAMS))
+    assert sum(spread(sc, l) for l in locals_) < \
+        sum(spread(rm, l) for l in locals_)
+
+
+def test_sequential_overflow_raises():
+    tiny = DRAMSpec(capacity_bytes=8 * 2 * 4 * 2048)   # 64 rows
+    big = (StreamGeometry("kv:groups0", n_pages=128, page_bytes=8192),)
+    with pytest.raises(PlacementError, match="overflows"):
+        build_placement("row-major", tiny, big)
+
+
+def test_bank_overflow_raises():
+    tiny = DRAMSpec(capacity_bytes=8 * 2 * 4 * 2048)   # 4 rows/bank
+    big = (StreamGeometry("kv:groups0", n_pages=64, page_bytes=8192),)
+    with pytest.raises(PlacementError, match="bank-interleaved: bank"):
+        build_placement("bank-interleaved", tiny, big)
+
+
+@given(
+    half_pages=st.integers(1, 40),
+    page_bytes=st.sampled_from([64, 640, 2048, 8192, 10000]),
+    param_bytes=st.integers(0, 200_000),
+)
+@settings(max_examples=20, deadline=None)
+def test_fitting_spec_fits_every_policy(half_pages, page_bytes, param_bytes):
+    streams = (
+        StreamGeometry("kv:groups0", n_pages=2 * half_pages,
+                       page_bytes=page_bytes, shards=2),
+        StreamGeometry("state:tail0", n_pages=2 * half_pages,
+                       page_bytes=640, shards=2),
+    )
+    spec = fitting_spec(streams, param_bytes=param_bytes)
+    for policy in PLACEMENT_POLICIES:
+        pl = build_placement(policy, spec, streams,
+                             param_bytes=param_bytes)
+        assert pl.alloc_hi <= spec.n_rows

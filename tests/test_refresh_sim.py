@@ -87,3 +87,46 @@ def test_pallas_backend_matches_ref():
     b = simulate(SPEC, Variant.FULL_RTC, backend="pallas", **kw)
     assert (a.explicit_refreshes, a.implicit_refreshes, a.violations) == \
            (b.explicit_refreshes, b.implicit_refreshes, b.violations)
+
+
+@given(
+    alloc=st.integers(1, 4096),
+    excess=st.integers(0, 8192),
+    windows=st.integers(1, 6),
+    lo=st.integers(0, 2048),
+)
+@settings(max_examples=40, deadline=None)
+def test_oversized_access_saturates_allocation(alloc, excess, windows, lo):
+    """PR 9 audit pin: rows_accessed_per_window > alloc_rows must
+    SATURATE the allocation (every allocated row accessed every
+    window), never alias back through ``% span`` into a partial sweep.
+    Any oversized rate is therefore exactly equivalent to
+    rows_accessed_per_window == alloc_rows."""
+    kw = dict(alloc_lo=lo, alloc_rows=alloc, n_windows=windows)
+    over = simulate(SPEC, Variant.FULL_RTC,
+                    rows_accessed_per_window=alloc + excess, **kw)
+    exact = simulate(SPEC, Variant.FULL_RTC,
+                     rows_accessed_per_window=alloc, **kw)
+    assert over.implicit_refreshes == alloc * windows
+    assert (over.implicit_refreshes, over.explicit_refreshes,
+            over.violations) == (exact.implicit_refreshes,
+                                 exact.explicit_refreshes, exact.violations)
+
+
+def test_masked_pallas_matches_ref():
+    """The trace-path kernel (window_update_masked) agrees with its
+    reference across an unaligned size that forces block padding."""
+    import numpy as np
+
+    from repro.kernels.refresh_sim.ops import window_update_masked
+
+    rng = np.random.default_rng(3)
+    n = 9000   # not a multiple of BLOCK_ROWS -> exercises padding
+    age = rng.integers(0, 2, n).astype(np.int32)
+    touched = rng.integers(0, 2, n).astype(np.int32)
+    kw = dict(alloc_lo=100, alloc_hi=7000, ref_lo=100, ref_hi=7000,
+              skip_accessed=1)
+    a = window_update_masked(age, touched, backend="ref", **kw)
+    b = window_update_masked(age, touched, backend="pallas", **kw)
+    assert np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert tuple(int(x) for x in a[1:]) == tuple(int(x) for x in b[1:])

@@ -1,0 +1,179 @@
+"""Trace-driven simulator: affine-equivalence contract + engine pins.
+
+Two layers:
+
+* ``simulate_trace`` on :func:`repro.core.trace.affine_masks` must
+  reproduce :func:`repro.core.refresh_sim.simulate` EXACTLY — same
+  implicit/explicit/violation counts and energies, for every variant,
+  with and without bank rounding.  This is what licenses comparing
+  trace-driven numbers against the closed-form model at all.
+* a real (smoke) paged serve's trace is deterministic — page accesses
+  depend on context lengths and scheduling, never token values — so its
+  derived counts are pinned here, end to end through placement and the
+  event-level simulator (the fig10_trace benchmark's contract).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dram import DRAMSpec
+from repro.core.placement import (PLACEMENT_POLICIES, build_placement,
+                                  fitting_spec)
+from repro.core.refresh_sim import simulate, simulate_trace
+from repro.core.rtc import Variant
+from repro.core.trace import PageAccessTrace, affine_masks, window_masks
+
+SPEC = DRAMSpec(capacity_bytes=16384 * 2048)  # 16k rows — fast
+
+ALL_VARIANTS = (Variant.BASELINE, Variant.MIN_RTC, Variant.MID_RTC,
+                Variant.FULL_RTC, Variant.FULL_RTC_PLUS,
+                Variant.SMART_REFRESH, Variant.NO_REFRESH)
+
+CASES = {
+    "streaming": dict(alloc_lo=0, alloc_rows=4096,
+                      rows_accessed_per_window=1024, n_windows=12),
+    "misaligned": dict(alloc_lo=100, alloc_rows=3000,
+                       rows_accessed_per_window=700, n_windows=8),
+    "saturated": dict(alloc_lo=64, alloc_rows=512,
+                      rows_accessed_per_window=512, n_windows=6),
+    "oversized": dict(alloc_lo=37, alloc_rows=1000,
+                      rows_accessed_per_window=2500, n_windows=5),
+    "matched": dict(alloc_lo=0, alloc_rows=8000,
+                    rows_accessed_per_window=SPEC.n_rows, n_windows=4),
+}
+
+
+def _equiv(variant, kw, bank_rounded):
+    a = simulate(SPEC, variant, bank_rounded=bank_rounded, **kw)
+    masks = affine_masks(
+        SPEC.n_rows, alloc_lo=kw["alloc_lo"], alloc_rows=kw["alloc_rows"],
+        rows_accessed_per_window=kw["rows_accessed_per_window"],
+        n_windows=kw["n_windows"])
+    b = simulate_trace(
+        SPEC, variant, masks=masks, alloc_lo=kw["alloc_lo"],
+        alloc_rows=kw["alloc_rows"], bank_rounded=bank_rounded,
+        matched=kw["rows_accessed_per_window"] >= SPEC.n_rows)
+    return a, b
+
+
+@pytest.mark.parametrize("bank_rounded", [False, True])
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("variant", ALL_VARIANTS)
+def test_affine_equivalence_exact(variant, case, bank_rounded):
+    a, b = _equiv(variant, CASES[case], bank_rounded)
+    assert (a.implicit_refreshes, a.explicit_refreshes, a.violations) == \
+           (b.implicit_refreshes, b.explicit_refreshes, b.violations), \
+        (variant, case, bank_rounded)
+    assert a.refresh_energy_j == b.refresh_energy_j
+    assert a.baseline_refresh_energy_j == b.baseline_refresh_energy_j
+    assert a.refresh_savings == b.refresh_savings
+
+
+def test_min_rtc_matched_needs_explicit_flag():
+    """MIN_RTC's all-or-nothing gate keys on the access RATE
+    (acc >= n_rows), which a touched-rows bitmap cannot express once
+    the allocation is smaller than the module: the 'matched' affine
+    case covers only its allocation's rows, so the derived default
+    (every module row touched) is False and MIN_RTC keeps refreshing —
+    callers replaying affine streams must pass ``matched`` through."""
+    kw = CASES["matched"]
+    masks = affine_masks(
+        SPEC.n_rows, alloc_lo=kw["alloc_lo"], alloc_rows=kw["alloc_rows"],
+        rows_accessed_per_window=kw["rows_accessed_per_window"],
+        n_windows=kw["n_windows"])
+    trace_kw = dict(masks=masks, alloc_lo=kw["alloc_lo"],
+                    alloc_rows=kw["alloc_rows"])
+    derived = simulate_trace(SPEC, Variant.MIN_RTC, **trace_kw)
+    explicit = simulate_trace(SPEC, Variant.MIN_RTC, matched=True,
+                              **trace_kw)
+    affine = simulate(SPEC, Variant.MIN_RTC, **kw)
+    assert explicit.explicit_refreshes == affine.explicit_refreshes == 0
+    assert derived.explicit_refreshes == SPEC.n_rows * kw["n_windows"]
+
+
+def test_irregular_trace_stays_violation_free():
+    """Beyond affine reach: a random (hot/cold skewed) bitmap still
+    upholds the integrity invariant under FULL_RTC and beats the
+    variant's own explicit count under BASELINE."""
+    rng = np.random.default_rng(11)
+    alloc_lo, alloc_rows, wins = 200, 2048, 10
+    masks = np.zeros((wins, SPEC.n_rows), bool)
+    hot = rng.choice(alloc_rows, size=300, replace=False)
+    for w in range(wins):
+        cold = rng.choice(alloc_rows, size=500, replace=False)
+        masks[w, alloc_lo + hot] = True
+        masks[w, alloc_lo + cold] = True
+    full = simulate_trace(SPEC, Variant.FULL_RTC, masks=masks,
+                          alloc_lo=alloc_lo, alloc_rows=alloc_rows)
+    base = simulate_trace(SPEC, Variant.BASELINE, masks=masks,
+                          alloc_lo=alloc_lo, alloc_rows=alloc_rows)
+    assert full.violations == base.violations == 0
+    assert full.explicit_refreshes < base.explicit_refreshes
+    assert full.refresh_savings > 0.9   # tight alloc on a 16k-row module
+
+
+# ---------------------------------------------------------------------------
+# engine integration: the fig10_trace smoke serve, pinned
+# ---------------------------------------------------------------------------
+PROMPT_LENS = (4, 9, 6, 12)
+
+
+@pytest.fixture(scope="module")
+def served_trace():
+    from repro.models.transformer import TransformerLM
+    from repro.configs import get_config
+    from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
+                             TrafficModel)
+
+    smoke = get_config("qwen1.5-0.5b", smoke=True)
+    model = TransformerLM(smoke)
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, max_len=32, max_batch=2,
+                         paged=PagedCacheConfig(page_size=8,
+                                                resident_pages=6))
+    trace = PageAccessTrace(engine._table.stream_names())
+    tele = ServeTelemetry(TrafficModel.from_config(smoke, max_len=32,
+                                                   page_size=8),
+                          trace=trace)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, smoke.vocab_size, (n,)).astype(np.int32)
+               for n in PROMPT_LENS]
+    engine.serve(prompts, max_new_tokens=12, seed=7, telemetry=tele)
+    geoms = engine._table.stream_geometries()
+    pbytes = smoke.param_counts()["total"] * 2   # bf16
+    return trace, geoms, pbytes
+
+
+def test_trace_shape_is_deterministic(served_trace):
+    """Scheduling (2 slots, 4 requests, tight page budget) fully
+    determines the access stream; pin its shape."""
+    trace, geoms, _ = served_trace
+    assert trace.stream_names == ("kv:groups0",)
+    assert trace.n_steps > len(PROMPT_LENS)   # decode steps + admissions
+    # every step touches at least one page of the only stream
+    assert all(step.accesses for step in trace.steps)
+    seen = trace.pages_touched()
+    assert len(seen) == len(geoms)
+    assert 0 < seen[0] <= geoms[0].n_pages
+
+
+def test_placement_policy_ordering_pinned(served_trace):
+    """The qualitative fig10_trace story, as an invariant: interleaving
+    widens the PAAR allocation, so row-major (and its co-located
+    refinement) always saves at least as much under FULL_RTC; every
+    policy stays violation-free."""
+    trace, geoms, pbytes = served_trace
+    spec = fitting_spec(geoms, param_bytes=pbytes)
+    savings = {}
+    for policy in PLACEMENT_POLICIES:
+        pl = build_placement(policy, spec, geoms, param_bytes=pbytes)
+        masks = window_masks(trace, pl)
+        assert masks.shape == (trace.n_steps, spec.n_rows)
+        res = simulate_trace(spec, Variant.FULL_RTC, masks=masks,
+                             alloc_lo=pl.alloc_lo,
+                             alloc_rows=pl.alloc_rows)
+        assert res.violations == 0, policy
+        savings[policy] = res.refresh_savings
+    assert savings["bank-interleaved"] < savings["row-major"]
+    assert savings["slot-colocated"] >= savings["row-major"] - 1e-12
+    assert all(0.0 < s <= 1.0 for s in savings.values())

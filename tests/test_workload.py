@@ -1,0 +1,103 @@
+"""Workload accounting fixes (PR 9): decode seq_len validation and the
+traffic-weighted merge of ``row_utilization``."""
+import dataclasses
+
+import pytest
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
+
+from repro.configs import get_config
+from repro.core.cnn_zoo import CNN_ZOO
+from repro.core.dram import MODULE_8GB
+from repro.core.workload import (WorkloadError, from_cnn, lm_workload,
+                                 merge)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: lm_workload decode must reject an empty context
+# ---------------------------------------------------------------------------
+def test_decode_zero_seq_len_raises():
+    """Regression for the silent ``max(seq_len, 1)`` clamp: a decode
+    profile with seq_len=0 used to bill one token of KV sweep and
+    footprint for a context the caller said did not exist."""
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    with pytest.raises(WorkloadError, match=r"seq_len=0"):
+        lm_workload(cfg, "decode", 0.02, seq_len=0)
+    with pytest.raises(WorkloadError, match=r"seq_len=-3"):
+        lm_workload(cfg, "decode", 0.02, seq_len=-3)
+
+
+def test_decode_error_is_a_value_error():
+    """Callers that guarded the old clamp with ``except ValueError``
+    keep working: WorkloadError subclasses it."""
+    assert issubclass(WorkloadError, ValueError)
+
+
+def test_decode_minimal_context_accounts_one_token():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    w1 = lm_workload(cfg, "decode", 0.02, seq_len=1)
+    w2 = lm_workload(cfg, "decode", 0.02, seq_len=2)
+    # KV sweep and footprint grow with the context; the per-step append
+    # (writes) does not
+    assert w2.read_bytes_per_iter > w1.read_bytes_per_iter
+    assert w2.footprint_bytes > w1.footprint_bytes
+    assert w2.write_bytes_per_iter == w1.write_bytes_per_iter
+
+
+def test_train_ignores_seq_len():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    w = lm_workload(cfg, "train", 0.02, seq_len=0)
+    assert w.footprint_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: merge() row_utilization is the traffic-weighted harmonic
+# mean — the merged profile's ACT rate equals the sum of the parts'
+# ---------------------------------------------------------------------------
+def _cnn(name, fps, ru):
+    return from_cnn(CNN_ZOO[name], fps=fps, row_utilization=ru)
+
+
+def test_merge_equal_utilization_is_identity():
+    """All fig11 mixes run the 0.5 default: the weighted mean of equal
+    values is that value, so the pinned calibration is untouched."""
+    ws = [_cnn("alexnet", 60, 0.5), _cnn("googlenet", 60, 0.5)]
+    assert merge("mix", *ws).row_utilization == pytest.approx(0.5)
+
+
+def test_merge_mixed_utilization_sums_act_rates():
+    ws = [_cnn("alexnet", 60, 0.25), _cnn("lenet", 30, 1.0)]
+    merged = merge("mix", *ws)
+    want = sum(w.row_activations_per_s(MODULE_8GB) for w in ws)
+    got = merged.row_activations_per_s(MODULE_8GB)
+    assert got == pytest.approx(want, rel=1e-9)
+    # the old min() billed every byte — lenet's included — at
+    # alexnet's 0.25 rows-per-byte efficiency, overstating the ACT rate
+    old_min = dataclasses.replace(merged, row_utilization=0.25)
+    assert old_min.row_activations_per_s(MODULE_8GB) > got
+
+
+@given(
+    ru_a=st.floats(0.05, 1.0),
+    ru_b=st.floats(0.05, 1.0),
+    fps_a=st.sampled_from([15, 30, 60]),
+    fps_b=st.sampled_from([15, 30, 60]),
+)
+@settings(max_examples=25, deadline=None)
+def test_merge_act_sum_invariant_property(ru_a, ru_b, fps_a, fps_b):
+    """The invariant that motivates the harmonic mean, across periods
+    and utilizations: each stream opens rows at its own efficiency, so
+    aggregate ACT/s is conserved under merge."""
+    ws = [_cnn("alexnet", fps_a, ru_a), _cnn("googlenet", fps_b, ru_b)]
+    merged = merge("mix", *ws)
+    want = sum(w.row_activations_per_s(MODULE_8GB) for w in ws)
+    assert merged.row_activations_per_s(MODULE_8GB) == \
+        pytest.approx(want, rel=1e-9)
+    lo = min(ru_a, ru_b)
+    hi = max(ru_a, ru_b)
+    assert lo - 1e-12 <= merged.row_utilization <= hi + 1e-12
+
+
+def test_merge_empty_raises():
+    with pytest.raises(ValueError):
+        merge("nothing")
