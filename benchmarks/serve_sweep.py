@@ -49,9 +49,26 @@ trace's mean per-window row count reproduces the trace-driven savings
 drift fails the run).  Traces are also asserted identical across
 backends per arch: page residency is scheduling, not kernel choice.
 
+v6 adds the prefix-sharing row (ROADMAP item 2): per arch, a fourth
+engine (gather, solo, ``PagedCacheConfig(sharing=...)``) serves a
+same-prefix workload — one exact duplicate (the whole-prompt memo's
+full prefill skip), one strict-prefix prompt, one unique — next to an
+unshared *twin* engine on the identical workload, asserted
+bit-identical.  The three baseline variants keep sharing OFF (their
+columns stay comparable across the v5→v6 bump; ``"prefix": None``
+marks them).  The sharing row carries a ``prefix`` dict: hit vs
+written admission bytes (their sum equals the twin's unshared total —
+the telemetry exact-sum invariant), COW fork copy bytes, attached page
+count, full skips, the ``savings_frac`` headline, and the measured
+per-step trace row-set totals for both engines (the shared total can
+only shrink).  Window-limited archs (gemma2's local rings,
+recurrentgemma's state pages) legitimately share less or nothing —
+the CI gate requires at least one row with real hits and a full skip,
+not every row.
+
 Schema (``BENCH_serve.json``)::
 
-    {"schema": "serve-decode-v5",
+    {"schema": "serve-decode-v6",
      "rows": [{"arch", "batch", "backend", "shards", "decode_steps",
                "steps_per_sec", "tok_per_sec",
                "kv_read_bytes_per_step", "gather_bytes_per_step",
@@ -63,7 +80,11 @@ Schema (``BENCH_serve.json``)::
                "trace_vs_analytic": {"trace_savings", "affine_savings",
                                      "delta", "match"},
                "mesh_matrix": {"<N>": {"static_per_device_bytes",
-                                       "collective_bytes"}, ...}}, ...]}
+                                       "collective_bytes"}, ...},
+               "prefix": None | {"hit_bytes", "admit_write_bytes",
+                                 "cow_bytes", "hit_pages", "full_skips",
+                                 "savings_frac", "trace_step_pages",
+                                 "twin_step_pages"}}, ...]}
 
     python benchmarks/serve_sweep.py [--archs all] [--out BENCH_serve.json]
 """
@@ -100,8 +121,8 @@ from repro.core.refresh_sim import simulate, simulate_trace
 from repro.core.rtc import Variant
 from repro.core.trace import PageAccessTrace, window_masks
 from repro.models.transformer import TransformerLM
-from repro.serve import (PagedCacheConfig, ServeEngine, ServeTelemetry,
-                         TrafficModel)
+from repro.serve import (PagedCacheConfig, PrefixSharingConfig, ServeEngine,
+                         ServeTelemetry, TrafficModel)
 
 _ITEMSIZE = {"bfloat16": 2, "float16": 2, "float32": 4}
 
@@ -295,7 +316,84 @@ def sweep_arch(arch: str, max_batch: int, new_tokens: int,
             continue
         assert tr.steps == ref_steps, (
             f"{arch}: {key} page trace diverged from gather")
+    rows.append(sweep_sharing(arch, model, params, smoke, traffic,
+                              max_batch, new_tokens, page_size, engine_len))
     return rows
+
+
+def sweep_sharing(arch, model, params, smoke, traffic, max_batch,
+                  new_tokens, page_size, engine_len) -> dict:
+    """The v6 prefix-sharing row: shared engine vs unshared twin.
+
+    Same-prefix workload (duplicate + strict prefix + unique), gather
+    backend, solo.  The twin serves the identical prompts with sharing
+    off; generations are asserted bit-identical, the telemetry
+    exact-sum invariant (hit + written == twin's total) is asserted,
+    and the trace's per-step page totals may only shrink.
+    """
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, smoke.vocab_size, (12,)).astype(np.int32)
+    prompts = [base, base.copy(), base[:9].copy(),
+               rng.integers(0, smoke.vocab_size, (5,)).astype(np.int32)]
+
+    def run(sharing):
+        engine = ServeEngine(
+            model, params, max_len=engine_len, max_batch=max_batch,
+            paged=PagedCacheConfig(page_size=page_size, sharing=sharing),
+            decode_backend="gather")
+        trace = PageAccessTrace(engine._table.stream_names())
+        tele = ServeTelemetry(traffic, ctx_scale=SERVE_CTX / engine_len,
+                              trace=trace)
+        engine.serve([prompts[-1]], 2, seed=1)      # warm the executables
+        out = engine.serve(prompts, new_tokens, seed=7, telemetry=tele)
+        return engine, tele, trace, out
+
+    _, _, twin_trace, twin_out = run(None)
+    engine, tele, trace, out = run(PrefixSharingConfig())
+    for i, (a, b) in enumerate(zip(twin_out, out)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{arch} request {i}: shared-prefix generation "
+                          f"diverged from the unshared twin")
+    shared_pages = sum(trace.step_page_counts())
+    twin_pages = sum(twin_trace.step_page_counts())
+    assert shared_pages <= twin_pages, (
+        f"{arch}: sharing grew the trace row set "
+        f"({shared_pages} > {twin_pages})")
+    n = max(tele.decode_steps, 1)
+    audit = decode_traffic_report(unit_from_engine(engine, arch))
+    trace_rtc, trace_cross = trace_rtc_columns(trace, engine._table, smoke)
+    return {
+        "arch": arch,
+        "batch": max_batch,
+        "backend": "gather",
+        "shards": engine._table.shards,
+        "decode_steps": tele.decode_steps,
+        "steps_per_sec": (tele.decode_steps / tele.decode_time_s
+                          if tele.decode_time_s > 0 else 0.0),
+        "tok_per_sec": tele.decode_tok_per_s,
+        "kv_read_bytes_per_step": tele.kv_read_bytes_total // n,
+        "gather_bytes_per_step": (tele.gather_read_bytes_total
+                                  + tele.gather_write_bytes_total) // n,
+        "static_bytes_per_step": sum(
+            audit["derived"].get(k, 0) for k in audit["expected"]),
+        "static_classes": {k: audit["derived"].get(k, 0)
+                           for k in sorted(audit["expected"])},
+        "static_match": bool(audit["match"]),
+        "page_size": page_size,
+        "trace_rtc": trace_rtc,
+        "trace_vs_analytic": trace_cross,
+        "prefix": {
+            "hit_bytes": tele.prefix_hit_bytes_total,
+            "admit_write_bytes": tele.admit_write_bytes_total,
+            "cow_bytes": (tele.cow_read_bytes_total
+                          + tele.cow_write_bytes_total),
+            "hit_pages": engine._table.stats["pages_attached"],
+            "full_skips": tele.prefix_full_skips,
+            "savings_frac": tele.prefix_hit_frac,
+            "trace_step_pages": shared_pages,
+            "twin_step_pages": twin_pages,
+        },
+    }
 
 
 def main():
@@ -317,14 +415,17 @@ def main():
                                args.page_size))
     per_device = partition_dry_run(archs)
     for r in rows:
+        r.setdefault("prefix", None)     # baseline variants: sharing OFF
         matrix = per_device.get((r["arch"], r["backend"]))
         r["mesh_matrix"] = matrix if matrix else None
     for r in rows:
         us = 1e6 / r["steps_per_sec"] if r["steps_per_sec"] else 0.0
         m8 = (r["mesh_matrix"] or {}).get("8") or {}
         tr = r["trace_rtc"]
+        px = r["prefix"]
         emit(f"serve_decode_{r['arch']}_{r['backend']}"
-             + (f"_sm{r['shards']}" if r["shards"] > 1 else ""), us,
+             + (f"_sm{r['shards']}" if r["shards"] > 1 else "")
+             + ("_prefix" if px is not None else ""), us,
              f"steps/s={r['steps_per_sec']:.2f} "
              f"kv_read/step={r['kv_read_bytes_per_step']} "
              f"gather/step={r['gather_bytes_per_step']} "
@@ -334,6 +435,8 @@ def main():
              f"trace_rtc[rm/bi/sc]="
              + "/".join(f"{tr[p]['refresh_savings']:.3f}"
                         for p in PLACEMENT_POLICIES)
+             + (f" prefix_hit={px['savings_frac']:.3f} "
+                f"skips={px['full_skips']}" if px is not None else "")
              + f" audit={'ok' if r['static_match'] else 'DRIFT'}")
     if not all(r["static_match"] for r in rows):
         raise SystemExit("static audit disagrees with telemetry — "
@@ -346,9 +449,17 @@ def main():
                for r in rows if not r["trace_vs_analytic"]["match"]]
         raise SystemExit(f"trace-driven refresh savings diverged from the "
                          f"affine model on equivalent inputs: {bad}")
+    px_rows = [r["prefix"] for r in rows if r["prefix"] is not None]
+    if not px_rows:
+        raise SystemExit("no prefix-sharing row was swept")
+    if not any(p["hit_bytes"] > 0 and p["full_skips"] >= 1
+               for p in px_rows):
+        raise SystemExit(
+            "no swept arch realized prefix hits + a full prefill skip — "
+            f"the sharing path regressed: {px_rows}")
     out = os.path.abspath(args.out)
     with open(out, "w") as f:
-        json.dump({"schema": "serve-decode-v5", "rows": rows}, f, indent=1)
+        json.dump({"schema": "serve-decode-v6", "rows": rows}, f, indent=1)
     print(f"wrote {out} ({len(rows)} rows)")
 
 

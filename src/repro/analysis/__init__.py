@@ -104,6 +104,19 @@ neither confirm nor retire the ``@mesh=512`` family, and
 ``python -m repro.analysis --write-baseline`` regenerates the file;
 ``--check-baseline`` is the CI gate.
 
+**Prefix sharing** (PR 10) changes nothing the auditor sees, by
+construction: sharing is host-side page-table bookkeeping (content
+hashes, refcounts, block-table values), and the lowered prefill/decode
+executables are byte-for-byte the ones audited here — a dedup-attach
+admission runs the same prefill executable with its scatter redirected
+to the DUMP row, and a COW fork reuses the audited contiguous-insert
+machinery's page-copy pattern.  The static per-class bills therefore
+remain the *unshared* worst case; the shared-page saving is a
+telemetry/trace-level row-set credit (``TrafficModel.prefix_hit_*``,
+``PageAccessTrace`` per-step dedup), never a change to what XLA moves
+per invocation.  The traffic-drift gate keeps holding exactly because
+sharing does not touch the lowered computation.
+
 Run ``python -m repro.analysis`` for the default audit matrix (4 archs
 x both paged decode backends, plus a forced-2-device mesh audit of the
 kernel backend); add ``--mesh 8 --mesh 64 ...`` for the partitioning

@@ -1,0 +1,11 @@
+"""Checkpointing: atomic, content-verified, resharding-on-restore.
+
+``store.py`` owns the whole design: checkpoints are written to a
+temporary directory and atomically renamed (a crashed writer can never
+leave a half-checkpoint that restore would read), every array records a
+content hash verified on load, and restore re-shards onto whatever mesh
+the restoring process is running — the saved layout does not constrain
+the restored one, which is what lets :mod:`repro.train`'s trainer do
+elastic re-mesh restarts.  Kept stdlib + numpy on the I/O path so a
+checkpoint can be inspected without jax.
+"""

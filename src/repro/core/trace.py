@@ -16,6 +16,18 @@ Token *values* never enter the trace — page accesses are determined by
 context lengths and scheduling alone, so a trace from fixed prompts is
 deterministic and its derived refresh counts are pinnable.
 
+Prefix sharing (PR 10) needs no special cases here, which is the
+point: the trace records *physical* page ids, and
+:meth:`PageAccessTrace.record_step` dedups them per step — so when N
+slots' block tables reference one refcounted shared page
+(:mod:`repro.serve.paging`), the step touches that page ONCE.  The
+shared-page saving therefore lands exactly where the paper's energy
+model looks: fewer distinct pages per step -> fewer DRAM rows per
+retention window under any placement -> fewer refresh-triggered-
+computation opportunities billed.  :meth:`PageAccessTrace.step_page_counts`
+exposes the per-stream touch totals a shared serve can be compared to
+its unshared twin on (``benchmarks/serve_sweep.py``'s prefix column).
+
 :func:`affine_masks` generates the bitmap the affine cursor would have
 produced, giving the equivalence bridge: ``simulate_trace`` on
 ``affine_masks(...)`` must reproduce ``simulate(...)`` exactly (see
@@ -92,6 +104,21 @@ class PageAccessTrace:
             for si, pids in step.accesses:
                 seen[si].update(pids)
         return tuple(len(s) for s in seen)
+
+    def step_page_counts(self) -> Tuple[int, ...]:
+        """Summed per-step page touches, per stream.
+
+        A page is counted once per step no matter how many slots'
+        block tables reference it (physical ids dedup in
+        :meth:`record_step`), so under prefix sharing this total
+        shrinks relative to an unshared serve of the same workload —
+        the measured form of the shared-page traffic saving.
+        """
+        totals = [0] * len(self.stream_names)
+        for step in self.steps:
+            for si, pids in step.accesses:
+                totals[si] += len(pids)
+        return tuple(totals)
 
 
 def window_masks(trace: PageAccessTrace, placement: Placement, *,

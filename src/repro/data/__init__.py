@@ -1,0 +1,11 @@
+"""Deterministic synthetic data pipeline.
+
+``pipeline.py`` generates seeded synthetic token batches with
+production-pipeline *shape*: sharded per-host batches, deterministic
+resume from a step counter (no stored iterator state), and a schema
+matching what :mod:`repro.train`'s steps consume.  Synthetic-only is a
+deliberate scope choice — the reproduction's subject is serving-time
+DRAM traffic and refresh energy (see ``docs/ARCHITECTURE.md``), so the
+data layer provides determinism for tests and benchmarks rather than
+real corpora.
+"""

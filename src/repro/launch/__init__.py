@@ -1,0 +1,12 @@
+"""Launchers: production meshes, assigned shape cells, and dry-runs.
+
+``mesh.py`` names the production mesh shapes; ``shapes.py`` pins the
+(architecture x input-shape) cell matrix the launchers are gated on;
+``serve.py`` and ``train.py`` are the CLI entry points wiring configs
+into :class:`repro.serve.ServeEngine` and :mod:`repro.train`
+respectively; ``dryrun_lib.py``/``dryrun.py`` build, lower, and
+compile any cell WITHOUT executing it — the abstract-params path the
+static analysis layer (:mod:`repro.analysis`) shares, so "does this
+cell lower on this mesh" is answerable on a laptop before burning
+accelerator time.
+"""

@@ -1,0 +1,27 @@
+"""Model zoo: one unified decoder-only stack covering all 10 assigned
+architectures, with serving-grade cache semantics built in.
+
+``config.py`` is the single dataclass every architecture is an instance
+of (attention pattern mix, GQA widths, softcap, MoE routing, SSM/RG-LRU
+recurrence, modality frontends); ``transformer.py`` assembles it into
+``TransformerLM`` with three entry points the serving stack depends on:
+``__call__`` (teacher forcing), ``prefill`` (one lowered full-sequence
+forward that also materializes the decode cache, bit-identical under
+right padding via ``lengths=`` masking), and ``decode_step`` (per-slot
+positions, vector ``pos``).
+
+Layer families: ``attention.py`` (GQA/MQA/MHA, causal + sliding-window
+rings, softcap, plus the contiguous AND paged KV caches — the paged
+path gathers pages into the exact contiguous layout so both are
+bit-identical), ``ssm.py`` (Mamba-1 selective scan with state pages),
+``rglru.py`` (RG-LRU / Griffin recurrence), ``moe.py`` (dropless top-k
+routing with capacity override for prefill), ``layers.py`` (norms,
+RoPE, MLPs, embeddings), ``frontends.py`` (vision/audio modality stubs
+that keep the multimodal configs servable).
+
+The design rule throughout: every cache-touching op takes both the
+contiguous and the paged representation and must produce bitwise-equal
+results (pinned across all architectures in
+``tests/test_paged_cache.py``) — residency policy lives in
+:mod:`repro.serve.paging`, never in the model code.
+"""

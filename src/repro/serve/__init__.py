@@ -55,13 +55,61 @@ block-table paging, chosen as follows:
   Generations are identical either way; telemetry accounts the gather
   path's phantom view traffic and the kernel path's true per-page
   reads, which is where the RTC energy delta between the two shows up.
+
+Prefix-sharing / copy-on-write design note (PR 10)
+--------------------------------------------------
+``PagedCacheConfig(sharing=PrefixSharingConfig(...))`` turns the page
+table content-addressed, ROMANet-style reuse applied at the serving
+layer (ROADMAP item 2): identical prompt prefixes map to the *same*
+physical KV pages, so N same-prefix requests allocate the prefix once.
+
+* **Hash scheme** — vLLM-style chained content hashing
+  (:func:`~repro.serve.paging.prefix_page_keys`): page ``j``'s key is
+  ``sha1(key_{j-1} || tokens[jP:(j+1)P])`` seeded with a version tag,
+  so a page's identity covers its whole prefix, not just its own
+  tokens; a ragged tail gets a ``tail``-salted key and the whole-prompt
+  key addresses the full-skip memo.  Keys are per stream and per PR 8
+  shard — registries live inside each stream's per-shard extent, so
+  sharing never crosses a device boundary.
+* **Refcount lifecycle** — a keyed page registers at admission with
+  refcount 1; a later admission whose page key is already registered
+  *attaches* (refcount += 1) instead of allocating, and its prefill
+  scatter is redirected to the DUMP row (the compute still runs — that
+  is what keeps shared serving bit-identical; the saving is the page
+  row set, which telemetry books as the ``prefix_hit`` class and the
+  trace path sees as per-step page-id dedup).  Release/offload
+  decrement; the page frees and unregisters at zero.  Sharing is
+  in-flight only: no pages outlive their last referencing request.
+* **Fork-on-write rules** — decode's ``prepare_step`` never appends
+  into a page the slot holds a *shared* reference to: refcount > 1
+  forks (allocate + on-device page copy + block-table retarget +
+  decref), refcount == 1 unregisters in place and writes through.
+  Fork allocation failure feeds the existing preempt/retry path, and
+  the sole-live-slot deadlock bound is preserved (a lone slot's refs
+  are all its own, so it never needs a fork page).  Recurrent *state*
+  pages are rewritten every step and therefore never shared.
+* **Scheduler policy** — ``schedule="prefix"`` groups the admission
+  queue by whole-prefix group key (first-arrival group order, so no
+  starvation) to co-schedule same-prefix requests while their pages
+  are live; generations are bit-independent of the schedule because
+  sampling keys are (request id, token index)-addressed.
+* **Full skip & suffix feed** — an exact whole-prompt hit on the
+  bounded memo skips prefill entirely (attach every page, restore the
+  host state snapshot, replay the memoized logits — bit-exact).  The
+  partial-prefix variant (``suffix_feed=True``) attaches the shared
+  full pages and feeds only the suffix through decode; it is opt-in
+  because prefill and decode-chain logits differ at float tolerance
+  (~1e-6), breaking the default bit-identity pin.
 """
 from repro.serve.engine import (PrefillBuckets, Request, ServeEngine,
                                 build_decode_step, build_prefill_step,
                                 cache_specs)
-from repro.serve.paging import PagedCacheConfig, PageTable, logical_view
+from repro.serve.paging import (PagedCacheConfig, PageTable, PrefixKeys,
+                                PrefixSharingConfig, logical_view,
+                                prefix_page_keys)
 from repro.serve.telemetry import ServeTelemetry, TrafficModel
 
 __all__ = ["PrefillBuckets", "Request", "ServeEngine", "build_decode_step",
            "build_prefill_step", "cache_specs", "PagedCacheConfig",
-           "PageTable", "logical_view", "ServeTelemetry", "TrafficModel"]
+           "PageTable", "PrefixKeys", "PrefixSharingConfig", "logical_view",
+           "prefix_page_keys", "ServeTelemetry", "TrafficModel"]

@@ -43,7 +43,8 @@ from repro.models.config import ModelConfig
 from repro.models.rglru import PagedRGLRUCache
 from repro.models.ssm import PagedSSMCache
 from repro.models.transformer import TransformerLM
-from repro.serve.paging import PagedCacheConfig, PageTable, slot_floor
+from repro.serve.paging import (PagedCacheConfig, PageTable, PrefixKeys,
+                                prefix_page_keys, slot_floor)
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
            "PrefillBuckets", "Request", "ServeEngine"]
@@ -459,17 +460,28 @@ class Request:
     max_new_tokens: int
     temperature: float = 0.0
     top_k: Optional[int] = None
+    # arrival index: the scheduler's FCFS/victim ordering (req_id is the
+    # caller-visible sampling identity and may arrive in any order)
+    order: int = 0
+    # content-addressed page keys when the engine serves with prefix
+    # sharing (None otherwise)
+    keys: Optional[PrefixKeys] = None
 
 
 class _Slot:
-    """Mutable scheduler state of one occupied batch slot."""
-    __slots__ = ("req", "pos", "emitted", "out")
+    """Mutable scheduler state of one occupied batch slot.
+
+    ``feed`` (suffix-feed sharing only): remaining prompt tokens to
+    teacher-force through the decode step before sampling starts; None
+    on every other path."""
+    __slots__ = ("req", "pos", "emitted", "out", "feed")
 
     def __init__(self, req: Request, pos: int, first_token: int):
         self.req = req
         self.pos = pos            # next decode feed position
         self.emitted = 1          # tokens sampled so far (incl. first)
         self.out = [first_token]
+        self.feed = None
 
 
 class _Suspended:
@@ -480,15 +492,18 @@ class _Suspended:
     (request, token-index)-addressed) once a batch slot and enough free
     pages exist.
     """
-    __slots__ = ("req", "pos", "emitted", "out", "next_tok", "payload")
+    __slots__ = ("req", "pos", "emitted", "out", "next_tok", "payload",
+                 "feed")
 
-    def __init__(self, req, pos, emitted, out, next_tok, payload):
+    def __init__(self, req, pos, emitted, out, next_tok, payload,
+                 feed=None):
         self.req = req
         self.pos = pos
         self.emitted = emitted
         self.out = out
         self.next_tok = next_tok
         self.payload = payload
+        self.feed = feed
 
 
 class ServeEngine:
@@ -537,6 +552,21 @@ class ServeEngine:
     ``tests/test_paged_attention_kernel.py``), and telemetry accounts
     only true per-page reads on the kernel path — no materialized-view
     traffic.
+
+    ``PagedCacheConfig(sharing=PrefixSharingConfig(...))`` turns on
+    prefix sharing (PR 10 — full design note in the
+    :mod:`repro.serve` package docstring): prompts are chain-hashed
+    into per-page content keys at submission, admission attaches
+    registry hits instead of re-allocating (copy-on-write protects the
+    shared pages — :class:`~repro.serve.paging.PageTable`), an
+    exact-duplicate prompt skips its prefill outright by replaying the
+    memoized first-token logits and restoring recurrent state from a
+    host snapshot, and the admission scheduler groups same-prefix
+    pending requests so their residency windows overlap.  Both default
+    paths are bit-identical to unshared serving on every arch (the
+    all-arch suite in ``tests/test_prefix_sharing.py`` pins it); the
+    opt-in ``suffix_feed`` path trades that guarantee for skipped
+    prefill compute on attention-only models.
     """
 
     def __init__(self, model: TransformerLM, params: dict,
@@ -604,6 +634,8 @@ class ServeEngine:
         # slot insertion is a pure copy/scatter for every layer kind.
         self._prefill = build_prefill_step(
             model, mesh, policy, cache_len=self.max_ctx, batch=1)[0]
+        sh = self.paged.sharing if self.paged is not None else None
+        self._sharing = sh if (sh is not None and sh.enabled) else None
         if self.paged is not None:
             shards = self._resolve_shards()
             self._table = PageTable(
@@ -856,7 +888,9 @@ class ServeEngine:
     def serve(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
               temperature: float = 0.0, top_k: Optional[int] = None,
               seed: int = 0, eos_id: Optional[int] = None,
-              telemetry=None) -> List[np.ndarray]:
+              telemetry=None,
+              request_ids: Optional[Sequence[int]] = None
+              ) -> List[np.ndarray]:
         """Serve a batch of requests with continuous batching.
 
         prompts: sequence of 1-D int32 token arrays (mixed lengths fine
@@ -880,9 +914,39 @@ class ServeEngine:
         decode step records every pool page it read/wrote (KV sweeps +
         appends, state pages), with admissions, restores, and page-out
         reads folded into the step they precede.
+
+        ``request_ids`` — caller-supplied stable id per prompt (default
+        ``0..n-1`` in input order).  The id seeds the request's
+        sampling keys and labels its telemetry/trace attribution, so it
+        MUST be unique within the call: duplicates are rejected up
+        front with the colliding indices named (two requests sharing an
+        id would silently alias each other's sampling stream).  Outputs
+        stay in *input* order regardless of the ids.
         """
         if max_new_tokens < 0:
             raise ValueError("max_new_tokens must be >= 0")
+        n_req = len(prompts)
+        if request_ids is None:
+            rids = list(range(n_req))
+        else:
+            rids = [int(r) for r in request_ids]
+            if len(rids) != n_req:
+                raise ValueError(
+                    f"request_ids: got {len(rids)} ids for {n_req} prompts")
+        seen: Dict[int, int] = {}
+        for i, rid in enumerate(rids):
+            if rid < 0:
+                raise ValueError(
+                    f"request id {rid} at index {i} is negative; ids seed "
+                    f"sampling keys and must be non-negative ints")
+            if rid in seen:
+                raise ValueError(
+                    f"duplicate request id {rid} at indices {seen[rid]} "
+                    f"and {i}: ids address sampling keys and telemetry/"
+                    f"trace attribution, so two requests sharing one "
+                    f"would silently alias")
+            seen[rid] = i
+        out_index = seen      # req_id -> position in `prompts`/outputs
         if telemetry is not None:
             # tell the sink which decode path moves the KV bytes (the
             # gather path's materialized logical view is real traffic
@@ -907,10 +971,15 @@ class ServeEngine:
                 raise ValueError(
                     f"temperature must be finite and >= 0, got {t} "
                     f"(request {i})")
-        requests = [Request(i, self._admit_prompt(p, i), max_new_tokens,
-                            temperature=float(t),
-                            top_k=vocab if tk is None else int(tk))
-                    for i, (p, t, tk) in enumerate(zip(prompts, temps, top_ks))]
+        sharing = self._sharing
+        requests = []
+        for i, (p, t, tk) in enumerate(zip(prompts, temps, top_ks)):
+            prompt = self._admit_prompt(p, i)
+            keys = (prefix_page_keys(prompt, self.paged.page_size)
+                    if sharing is not None else None)
+            requests.append(Request(
+                rids[i], prompt, max_new_tokens, temperature=float(t),
+                top_k=vocab if tk is None else int(tk), order=i, keys=keys))
         outputs: List[Optional[np.ndarray]] = [None] * len(requests)
         if max_new_tokens == 0:
             return [np.zeros((0,), np.int32) for _ in requests]
@@ -960,8 +1029,26 @@ class ServeEngine:
         emit_vec = np.zeros((B,), np.int32)
         temp_vec = np.zeros((B,), np.float32)
         topk_vec = np.full((B,), vocab, np.int32)
-        pending = collections.deque(requests)
+        if sharing is not None and sharing.schedule == "prefix":
+            # prefix-aware admission: group same-prefix requests so
+            # their residency windows overlap (sharing is an in-flight
+            # property — a registered page lives only while a slot
+            # holds it).  Group order is first arrival, so no group
+            # starves; generations are bit-independent of the schedule
+            # (sampling keys are (request, token-index)-addressed).
+            groups: Dict[bytes, List[Request]] = {}
+            for r in requests:
+                groups.setdefault(r.keys.group, []).append(r)
+            pending = collections.deque(
+                r for grp in groups.values() for r in grp)
+        else:
+            pending = collections.deque(requests)
         suspended: collections.deque = collections.deque()
+        # whole-prompt memo: keys.whole -> (first-token logits, state
+        # snapshot, plen).  Host-resident, per serve call, FIFO-capped;
+        # an exact-duplicate prompt whose pages are all still registered
+        # admits through PageTable.admit_cached with no prefill at all.
+        memo: Dict[bytes, tuple] = {}
 
         def occupy(s: int, st: _Slot, next_tok: int):
             slots[s] = st
@@ -972,7 +1059,7 @@ class ServeEngine:
         def retire(s: int):
             nonlocal cache
             st = slots[s]
-            outputs[st.req.req_id] = np.asarray(st.out, np.int32)
+            outputs[out_index[st.req.req_id]] = np.asarray(st.out, np.int32)
             slots[s] = None
             if paged:
                 cache = self._table.release(cache, s)
@@ -991,7 +1078,8 @@ class ServeEngine:
             note_pages(victim)   # offload reads every held page (before pop)
             cache, payload = self._table.offload(cache, victim, st.pos)
             suspended.append(_Suspended(st.req, st.pos, st.emitted, st.out,
-                                        int(tok_vec[victim]), payload))
+                                        int(tok_vec[victim]), payload,
+                                        feed=st.feed))
             slots[victim] = None
             if telemetry is not None:
                 telemetry.record_page_out(st.pos)
@@ -1005,20 +1093,21 @@ class ServeEngine:
             shard-local, so only slots pinned to the grower's shard can
             free the pages it needs — victims come from that shard."""
             nonlocal cache
+            cow: List[Tuple[int, int]] = []
             order = sorted((s for s in range(B) if slots[s] is not None),
-                           key=lambda s: slots[s].req.req_id)
+                           key=lambda s: slots[s].req.order)
             for s in order:
                 if slots[s] is None:
                     continue                 # preempted by an earlier grower
                 while slots[s] is not None:
                     cache, ok = self._table.prepare_step(
-                        cache, s, int(pos_vec[s]))
+                        cache, s, int(pos_vec[s]), cow_events=cow)
                     if ok:
                         break
                     g = self._table.shard_of(s)
                     victims = [v for v in range(B) if slots[v] is not None
                                and self._table.shard_of(v) == g]
-                    victim = max(victims, key=lambda v: slots[v].req.req_id)
+                    victim = max(victims, key=lambda v: slots[v].req.order)
                     if victim == s and len(victims) == 1:
                         raise RuntimeError(   # pragma: no cover
                             "paged cache: resident-page budget exhausted "
@@ -1026,6 +1115,11 @@ class ServeEngine:
                             "unreachable when every per-shard extent "
                             "covers one full slot")
                     suspend(victim)
+            if cow and telemetry is not None:
+                rec = getattr(telemetry, "record_cow", None)
+                if rec is not None:
+                    for _, layer_tokens in cow:
+                        rec(layer_tokens)
 
         def admit():
             nonlocal cache
@@ -1044,14 +1138,78 @@ class ServeEngine:
                         note_pages(s)   # restore writes the new pages
                         st = _Slot(sp.req, pos=sp.pos, first_token=0)
                         st.out, st.emitted = sp.out, sp.emitted
+                        st.feed = sp.feed
                         occupy(s, st, sp.next_tok)
                         if telemetry is not None:
                             telemetry.record_page_in(sp.payload.tokens)
                         continue
                     req = pending[0]
                     plen = req.prompt.shape[0]
-                    if paged and not self._table.can_admit(plen, s):
+                    keys = req.keys
+                    if (paged and sharing is not None
+                            and keys.whole in memo
+                            and self._table.can_admit_cached(s, plen, keys)):
+                        # full skip: the exact prompt prefilled earlier
+                        # and every page is still registered — attach it
+                        # all, restore recurrent state from the host
+                        # snapshot, and replay the memoized first-token
+                        # logits (bit-identical: both round trips are
+                        # exact).  No prefill executable runs.
+                        pending.popleft()
+                        mlogits, msnap, _ = memo[keys.whole]
+                        cache = self._table.admit_cached(
+                            cache, s, plen, keys, msnap)
+                        note_pages(s)
+                        adm = self._table.last_admit
+                        if telemetry is not None:
+                            rec = getattr(telemetry, "record_admit_shared",
+                                          None)
+                            if rec is not None:
+                                rec(plen, adm["attached_layer_tokens"],
+                                    adm["total_layer_tokens"],
+                                    skipped_prefill=True)
+                        key = self._keys(base,
+                                         np.asarray([req.req_id], np.int32),
+                                         np.zeros((1,), np.int32))
+                        first = int(np.asarray(sample(
+                            jnp.asarray(mlogits), key,
+                            np.asarray([req.temperature], np.float32),
+                            np.asarray([req.top_k], np.int32)))[0])
+                        st = _Slot(req, pos=plen, first_token=first)
+                        occupy(s, st, first)
+                        if finished(st, first):
+                            retire(s)
+                        continue
+                    if paged and not self._table.can_admit(plen, s, keys):
                         break                # wait for pages to free
+                    if paged and sharing is not None and sharing.suffix_feed:
+                        k = self._table.joint_prefix_pages(s, keys, plen)
+                        if k > 0:
+                            # opt-in suffix feed (attention-only):
+                            # attach the resident prefix pages and
+                            # teacher-force the novel suffix through
+                            # the decode step — no prefill, no new
+                            # executables, tolerance-level (not
+                            # bitwise) parity with the prefill path.
+                            pending.popleft()
+                            ktok = k * self.paged.page_size
+                            cache = self._table.attach_prefix(
+                                cache, s, keys, k)
+                            note_pages(s)
+                            adm = self._table.last_admit
+                            if telemetry is not None:
+                                rec = getattr(telemetry,
+                                              "record_admit_shared", None)
+                                if rec is not None:
+                                    rec(plen, adm["attached_layer_tokens"],
+                                        adm["total_layer_tokens"],
+                                        suffix_feed=True)
+                            st = _Slot(req, pos=ktok, first_token=0)
+                            st.out, st.emitted = [], 0
+                            st.feed = collections.deque(
+                                int(t) for t in req.prompt[ktok + 1:])
+                            occupy(s, st, int(req.prompt[ktok]))
+                            continue
                     pending.popleft()
                     bucket = self.buckets.bucket_for(plen)
                     padded = np.zeros((1, bucket), np.int32)
@@ -1061,7 +1219,26 @@ class ServeEngine:
                         self.params, jnp.asarray(padded),
                         jnp.asarray([plen], jnp.int32))
                     if paged:
-                        cache = self._table.admit(cache, one, s, plen)
+                        if sharing is not None:
+                            cache = self._table.admit(cache, one, s, plen,
+                                                      keys)
+                            adm = self._table.last_admit
+                            if telemetry is not None:
+                                rec = getattr(telemetry,
+                                              "record_admit_shared", None)
+                                if rec is not None:
+                                    rec(plen, adm["attached_layer_tokens"],
+                                        adm["total_layer_tokens"])
+                            if (sharing.memo_size > 0
+                                    and self._table.fully_shareable(plen)
+                                    and keys.whole not in memo):
+                                memo[keys.whole] = (
+                                    np.asarray(logits),
+                                    self._table.state_snapshot(one), plen)
+                                while len(memo) > sharing.memo_size:
+                                    memo.pop(next(iter(memo)))
+                        else:
+                            cache = self._table.admit(cache, one, s, plen)
                         note_pages(s)   # admission scatters the prefill
                     else:
                         cache = self._insert(cache, one,
@@ -1114,7 +1291,17 @@ class ServeEngine:
                 pending_pages.clear()
             for s in active:
                 st = slots[s]
-                token = int(toks[s])
+                if st.feed is not None and st.feed:
+                    # suffix feed: this step consumed a prompt token;
+                    # its sampled draw is discarded (emit_vec stays 0,
+                    # so the eventual first token still uses sampling
+                    # key (request, 0)) and the next prompt token rides
+                    # the next step.
+                    st.pos += 1
+                    tok_vec[s], pos_vec[s] = st.feed.popleft(), st.pos
+                    continue
+                st.feed = None   # last fed step falls through: its
+                token = int(toks[s])   # draw IS the first emitted token
                 st.out.append(token)
                 st.emitted += 1
                 st.pos += 1

@@ -26,6 +26,29 @@ architectures serve through the same allocator:
   pages (the block table re-targets; content is unchanged).  The
   engine accounts both directions as page-in/page-out traffic
   (:mod:`repro.serve.telemetry`).
+* **prefix sharing + copy-on-write** (PR 10) — identical prompt
+  prefixes hash to the same physical pages.  A KV page's content is a
+  pure function of the token prefix up to and including its tokens
+  (attention is causal), so one chained content hash per page-granular
+  token chunk (:func:`prefix_page_keys`) keys a per-(stream, shard)
+  registry of live pages.  Admission attaches registry hits instead of
+  allocating: the block-table row points at the shared page, the
+  admission scatter for that row is redirected to the shard's DUMP
+  page, and the page's refcount rises.  Decode forks a private copy on
+  the first write into a shared page (refcount > 1: device-side page
+  copy + block re-target; refcount == 1: the sole owner unregisters it
+  in place and writes through) — so ring wraps and appends into a
+  shared partial tail page stay bit-identical to unshared serving.
+  Refcount lifecycle: register-on-admit (refcount 1), +1 per attach,
+  -1 on fork/release/offload, unregister + free at zero.  A registered
+  page therefore lives exactly as long as one admitted slot still
+  references it — sharing is an in-flight property, which is why the
+  engine's prefix-aware scheduler batches same-prefix requests.
+  Registries are strictly per shard: a slot only ever attaches pages
+  inside its own device-local extent, preserving the PR 8 no-pool-
+  collective layout.  State (ssm/rglru) pages are rewritten every
+  decode step and never shared; the engine's full-prompt memo restores
+  them from a host snapshot instead.
 
 Per-stream pool capacity is ``resident_pages`` + the reserved pages
 (ZERO, DUMP — :mod:`repro.models.attention`).  ``resident_pages`` must
@@ -51,6 +74,7 @@ original single-pool allocator, bit for bit.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -65,6 +89,7 @@ from repro.models.ssm import PagedSSMCache, SSMCache
 from repro.models.transformer import TransformerLM
 
 __all__ = ["PagedCacheConfig", "PageTable", "PagePayload", "PageTableError",
+           "PrefixSharingConfig", "PrefixKeys", "prefix_page_keys",
            "logical_view", "slot_floor"]
 
 
@@ -86,6 +111,108 @@ def slot_floor(cfg, max_ctx: int, page_size: int) -> int:
             L = cfg.decode_cache_len(kind, max_ctx)
             floor = max(floor, n_logical_pages(L, page_size))
     return floor
+
+
+# ---------------------------------------------------------------------------
+# Prefix-sharing keys
+# ---------------------------------------------------------------------------
+_CHAIN_SEED = b"rtc-prefix-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixKeys:
+    """Content-addressed page keys of one prompt.
+
+    ``full[j]`` is the chained digest of token pages ``0..j`` — equal
+    across two prompts iff their first ``(j+1)*page_size`` tokens are
+    equal, so it keys the j-th full KV page in every stream.  ``tail``
+    keys the partial last page (chain- and length-sensitive; ``None``
+    when the prompt is page-aligned).  ``whole`` digests the entire
+    prompt (the engine's full-prompt memo key) and ``group`` is the
+    scheduler's batching key (first full page, or ``whole`` for
+    prompts shorter than one page).
+    """
+
+    full: Tuple[bytes, ...]
+    tail: Optional[bytes]
+    whole: bytes
+    group: bytes
+
+
+def prefix_page_keys(tokens, page_size: int) -> PrefixKeys:
+    """Chain-hash a prompt into per-page content keys.
+
+    ``key_j = H(key_{j-1} || tokens[j*P:(j+1)*P])`` over full pages —
+    the vLLM-style chaining that makes a page key identify the whole
+    token prefix behind it, not just the page's own tokens (a KV page's
+    content depends on every earlier token through causal attention).
+    One hash chain serves all cache streams: per-stream registries map
+    the same key to their own physical page.
+    """
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    chain = hashlib.sha1(_CHAIN_SEED).digest()
+    full: List[bytes] = []
+    n_full = toks.size // page_size
+    for j in range(n_full):
+        chain = hashlib.sha1(
+            chain + toks[j * page_size:(j + 1) * page_size].tobytes()
+        ).digest()
+        full.append(chain)
+    rem = toks.size - n_full * page_size
+    tail = (hashlib.sha1(chain + b"tail"
+                         + toks[n_full * page_size:].tobytes()).digest()
+            if rem else None)
+    whole = tail if tail is not None else (full[-1] if full else chain)
+    group = full[0] if full else whole
+    return PrefixKeys(full=tuple(full), tail=tail, whole=whole, group=group)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSharingConfig:
+    """Prefix-sharing knobs (``PagedCacheConfig.sharing``).
+
+    ``enabled``      — master switch; ``None``/disabled serves exactly
+                       the pre-sharing allocator, bit for bit.
+    ``schedule``     — pending-queue admission order: ``"prefix"``
+                       groups same-prefix requests (group order = first
+                       arrival, so FCFS progress is preserved) to
+                       maximize in-flight hits; ``"fifo"`` keeps raw
+                       arrival order.  Generations are bit-independent
+                       of the schedule (sampling keys are (request,
+                       token-index)-addressed), only the hit rate moves.
+    ``suffix_feed``  — opt-in compute skip for *proper*-prefix hits on
+                       attention-only models: attach the cached prefix
+                       pages and teacher-force only the novel suffix
+                       through the existing decode executable (zero new
+                       lowered executables).  Decode-path arithmetic is
+                       tolerance-equal, not bitwise-equal, to prefill
+                       (~1e-6 logit drift), so this mode trades the
+                       bit-identity guarantee for skipped prefill
+                       compute — hence opt-in.  The default sharing
+                       paths (dedup-attach and the full-prompt memo
+                       skip, which replays the memoized prefill logits
+                       exactly) stay bit-identical.
+    ``memo_size``    — full-prompt memo entries kept per serve call
+                       (prefill logits + recurrent-state snapshot,
+                       host-resident; FIFO eviction).
+    """
+
+    enabled: bool = True
+    schedule: str = "prefix"
+    suffix_feed: bool = False
+    memo_size: int = 64
+
+    def __post_init__(self):
+        if self.schedule not in ("prefix", "fifo"):
+            raise ValueError(
+                f"PrefixSharingConfig.schedule must be 'prefix' or 'fifo', "
+                f"got {self.schedule!r}")
+        if self.memo_size < 0:
+            raise ValueError(
+                f"PrefixSharingConfig.memo_size must be >= 0, "
+                f"got {self.memo_size}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +251,10 @@ class PagedCacheConfig:
                           cache geometry on a different (e.g. solo
                           compile-only) mesh, as the partitioning
                           auditor does.
+    ``sharing``         — prefix-sharing/copy-on-write knobs
+                          (:class:`PrefixSharingConfig`); ``None``
+                          (default) disables sharing entirely and
+                          serves exactly the pre-sharing allocator.
 
     Field-local constraints are checked at construction; the
     cross-field budget floor (``resident_pages`` must hold one fully
@@ -138,6 +269,7 @@ class PagedCacheConfig:
     max_ctx: Optional[int] = None
     state_pages: Optional[int] = None
     shards: int = 1
+    sharing: Optional[PrefixSharingConfig] = None
 
     def __post_init__(self):
         if self.shards < 1:
@@ -204,10 +336,17 @@ class _Stream:
     ``free`` is one free list *per data shard*: ``free[g]`` holds only
     global page ids inside shard ``g``'s pool extent
     ``[g*ext, (g+1)*ext)``, whose first ``RESERVED_PAGES`` ids are that
-    shard's private ZERO/DUMP pair (:meth:`zero` / :meth:`dump`)."""
+    shard's private ZERO/DUMP pair (:meth:`zero` / :meth:`dump`).
+
+    Prefix-sharing registry (KV streams only): ``shared[g]`` maps a
+    content key (:func:`prefix_page_keys`) to the live page holding
+    that content inside shard ``g``'s extent; ``ref[pid]`` counts the
+    slots whose block table points at a registered page, and
+    ``rkey[pid]`` remembers the (shard, key) entry so forks and
+    releases can unregister without a reverse scan."""
 
     __slots__ = ("where", "kind", "cache_len", "n_lp", "n_pages", "shards",
-                 "ext", "free", "slot_pages")
+                 "ext", "free", "slot_pages", "shared", "ref", "rkey")
 
     def __init__(self, where, kind, cache_len, n_lp, n_pages, shards=1):
         self.where = where            # ("groups", i) | ("tail", i)
@@ -222,11 +361,19 @@ class _Stream:
         self.reset_free()
         # KV: {slot: {jdx: pid}}; state: {slot: pid}
         self.slot_pages: Dict[int, object] = {}
+        self.shared: List[Dict[bytes, int]] = [{} for _ in range(shards)]
+        self.ref: Dict[int, int] = {}
+        self.rkey: Dict[int, Tuple[int, bytes]] = {}
 
     def reset_free(self) -> None:
         self.free = [list(range(g * self.ext + RESERVED_PAGES,
                                 (g + 1) * self.ext))
                      for g in range(self.shards)]
+
+    def reset_sharing(self) -> None:
+        self.shared = [{} for _ in range(self.shards)]
+        self.ref.clear()
+        self.rkey.clear()
 
     def zero(self, g: int) -> int:
         """Global id of shard ``g``'s ZERO page."""
@@ -336,6 +483,16 @@ class PageTable:
                 self.streams.append(_Stream(
                     where, kind, None, 1, self.state_pages, self.shards))
 
+        # per-serve prefix-sharing counters (reset() zeroes them); tests
+        # pin the allocation-once bound through these
+        self.stats: Dict[str, int] = {
+            "pages_registered": 0, "pages_attached": 0,
+            "cow_forks": 0, "full_attaches": 0}
+        # per-stream layer-token accounting of the most recent admit /
+        # admit_cached / attach_prefix — the engine turns this into the
+        # telemetry prefix-hit traffic class
+        self.last_admit: Optional[Dict[str, int]] = None
+
         self.bind_shardings(cache_shardings)
 
     def shard_of(self, slot: int) -> int:
@@ -360,9 +517,14 @@ class PageTable:
         self._insert_jit = jax.jit(self._insert_fn, **kw)
         self._release_jit = jax.jit(self._release_fn, **kw)
         self._restore_jit = jax.jit(self._restore_fn, **kw)
+        self._attach_jit = jax.jit(self._attach_fn, **kw)
         self._assign_jit = {
             si: jax.jit(lambda c, s, j, p, _si=si: self._assign_fn(_si, c, s, j, p),
                         **kw)
+            for si, st in enumerate(self.streams) if not st.is_state}
+        self._fork_jit = {
+            si: jax.jit(lambda c, s, src, dst, j, _si=si:
+                        self._fork_fn(_si, c, s, src, dst, j), **kw)
             for si, st in enumerate(self.streams) if not st.is_state}
         self._fetch_jit = {
             si: (jax.jit(lambda c, pid, _si=si: self._fetch_state_fn(_si, c, pid))
@@ -371,10 +533,15 @@ class PageTable:
             for si, st in enumerate(self.streams)}
 
     def reset(self) -> None:
-        """Drop all allocations (fresh serve call: every page free)."""
+        """Drop all allocations (fresh serve call: every page free,
+        every sharing registry empty, stats zeroed)."""
         for st in self.streams:
             st.reset_free()
             st.slot_pages.clear()
+            st.reset_sharing()
+        for k in self.stats:
+            self.stats[k] = 0
+        self.last_admit = None
 
     # ------------------------------------------------------------- structure
     def _positions(self):
@@ -405,14 +572,97 @@ class PageTable:
         return n_logical_pages(
             min(max(int(tokens), 1), stream.cache_len), self.page_size)
 
-    def can_admit(self, plen: int, slot: int) -> bool:
+    # --------------------------------------------------- prefix sharing
+    @staticmethod
+    def _shareable(st: _Stream, plen: int) -> bool:
+        """A stream's prefill pages are content-addressable only when
+        the prompt fits its ring (``plen <= cache_len``): a wrapped
+        prefill overwrites page rows, so page content stops being a
+        pure function of the token prefix.  State streams never share
+        (rewritten every decode step)."""
+        return (not st.is_state) and plen <= st.cache_len
+
+    def _stream_layers(self, st: _Stream) -> int:
+        """Model layers stacked behind one page id of this stream —
+        the layer-token multiplier for hit/fork traffic accounting."""
+        return self.cfg.n_groups if st.where[0] == "groups" else 1
+
+    def _page_key(self, keys: PrefixKeys, j: int, plen: int):
+        """Content key of prompt page ``j`` (full-page chain digest, or
+        the tail digest for the partial last page)."""
+        return (keys.full[j] if (j + 1) * self.page_size <= plen
+                else keys.tail)
+
+    def _register(self, st: _Stream, g: int, key: bytes, pid: int) -> None:
+        st.shared[g][key] = pid
+        st.ref[pid] = 1
+        st.rkey[pid] = (g, key)
+        self.stats["pages_registered"] += 1
+
+    def _unregister(self, st: _Stream, pid: int) -> None:
+        g, key = st.rkey.pop(pid)
+        del st.ref[pid]
+        if st.shared[g].get(key) == pid:
+            del st.shared[g][key]
+
+    def _decref(self, st: _Stream, g: int, pid: int) -> None:
+        """Drop one block-table reference to a registered page; the
+        page frees (and leaves the registry) when nobody points at it."""
+        st.ref[pid] -= 1
+        if st.ref[pid] == 0:
+            self._unregister(st, pid)
+            st.free[g].append(pid)
+
+    def fully_shareable(self, plen: int) -> bool:
+        """Whether every KV stream can content-address a ``plen``-token
+        prompt (no ring wrap anywhere) — the engine's condition for
+        whole-prompt memoization: only then do the registered pages plus
+        a state snapshot reconstruct the complete admission."""
+        return all(self._shareable(st, plen) for st in self.streams
+                   if not st.is_state)
+
+    def _pages_missing(self, st: _Stream, g: int, plen: int,
+                       keys: Optional[PrefixKeys]) -> int:
+        """Fresh pages admitting a ``plen`` prompt would pop from shard
+        ``g``'s free list in this stream (registry hits cost none)."""
+        need = self.kv_pages_for(plen, st)
+        if keys is None or not self._shareable(st, plen):
+            return need
+        return sum(1 for j in range(need)
+                   if st.shared[g].get(self._page_key(keys, j, plen)) is None)
+
+    def can_admit(self, plen: int, slot: int,
+                  keys: Optional[PrefixKeys] = None) -> bool:
         """Whether ``slot``'s shard has pages for a ``plen``-token
-        prompt in every stream (allocation is strictly shard-local)."""
+        prompt in every stream (allocation is strictly shard-local).
+        With ``keys``, registry hits are free — only the miss pages
+        need free-list capacity."""
         g = self.shard_of(slot)
         for st in self.streams:
-            need = 1 if st.is_state else self.kv_pages_for(plen, st)
+            need = 1 if st.is_state else self._pages_missing(st, g, plen, keys)
             if len(st.free[g]) < need:
                 return False
+        return True
+
+    def can_admit_cached(self, slot: int, plen: int,
+                         keys: Optional[PrefixKeys]) -> bool:
+        """Whether the whole prompt is resident in ``slot``'s shard:
+        every KV page of every stream is registered (full skip needs no
+        prefill compute at all) and each state stream has a free page
+        for the host-snapshot restore."""
+        if keys is None:
+            return False
+        g = self.shard_of(slot)
+        for st in self.streams:
+            if st.is_state:
+                if not st.free[g]:
+                    return False
+                continue
+            if not self._shareable(st, plen):
+                return False
+            for j in range(self.kv_pages_for(plen, st)):
+                if st.shared[g].get(self._page_key(keys, j, plen)) is None:
+                    return False
         return True
 
     def free_page_counts(self) -> Dict[Tuple[str, int], int]:
@@ -494,27 +744,33 @@ class PageTable:
         return out
 
     # ------------------------------------------------------------ jitted ops
-    def _insert_fn(self, cache, one, slot, pages, zeros, dumps):
+    def _insert_fn(self, cache, one, slot, pages, blocks, zeros, dumps):
         """Scatter a prefilled batch-1 contiguous cache into this
         slot's freshly assigned pages.  ``pages`` mirrors the stream
-        list: KV entries are ``[n_lp]`` int32 page ids (-1 = logical
-        page left unallocated -> block points at the slot's shard's
-        ZERO), state entries are scalar int32 page ids.  ``zeros`` /
-        ``dumps`` are the per-stream reserved-page ids of the slot's
-        shard, passed traced so one compile serves every slot."""
+        list: KV entries are ``[n_lp]`` int32 *write* page ids (-1 =
+        this logical page gets no fresh write -> the scatter row is
+        redirected to the slot's shard's DUMP), state entries are
+        scalar int32 page ids.  ``blocks`` carries the block-table row
+        per KV stream (-1 -> ZERO); it differs from ``pages`` exactly
+        on prefix-sharing attach rows, whose block points at the shared
+        page while the redundant prefill write lands in DUMP.  Without
+        sharing ``blocks is pages`` and this is the original admit,
+        bit for bit.  ``zeros`` / ``dumps`` are the per-stream
+        reserved-page ids of the slot's shard, passed traced so one
+        compile serves every slot."""
         for si, st in enumerate(self.streams):
             pc, oc = self._get(cache, st.where), self._get(one, st.where)
             grouped = st.where[0] == "groups"
             if st.is_state:
                 pc = self._ins_state(pc, oc, slot, pages[si], grouped)
             else:
-                pc = self._ins_kv(pc, oc, slot, pages[si], grouped,
-                                  zeros[si], dumps[si])
+                pc = self._ins_kv(pc, oc, slot, pages[si], blocks[si],
+                                  grouped, zeros[si], dumps[si])
             cache = self._replace(cache, st.where, pc)
         return cache
 
-    def _ins_kv(self, pc: PagedKVCache, oc: KVCache, slot, pids, grouped,
-                zero, dump):
+    def _ins_kv(self, pc: PagedKVCache, oc: KVCache, slot, pids, bids,
+                grouped, zero, dump):
         P, L = pc.page_size, pc.cache_len
         n_lp = pids.shape[0]
         write_ids = jnp.where(pids < 0, dump, pids)
@@ -525,7 +781,7 @@ class PageTable:
             return pool.at[write_ids].set(
                 src.reshape((n_lp, P) + rows.shape[1:]))
 
-        block_row = jnp.where(pids < 0, zero, pids)
+        block_row = jnp.where(bids < 0, zero, bids)
         if grouped:
             kp = jax.vmap(scat)(pc.kp, oc.k[:, 0])
             vp = jax.vmap(scat)(pc.vp, oc.v[:, 0])
@@ -583,6 +839,64 @@ class PageTable:
                 vp=pc.vp.at[pid].set(0),
                 block=pc.block.at[slot, jdx].set(pid))
         return self._replace(cache, st.where, pc)
+
+    def _fork_fn(self, si, cache, slot, src, dst, jdx):
+        """Copy-on-write fork: duplicate shared page ``src`` into the
+        freshly allocated ``dst`` and re-target this slot's block row —
+        the only device traffic sharing adds (one page read + write per
+        fork, which telemetry bills as the ``cow`` class)."""
+        st = self.streams[si]
+        pc = self._get(cache, st.where)
+        if st.where[0] == "groups":
+            pc = dataclasses.replace(
+                pc,
+                kp=pc.kp.at[:, dst].set(pc.kp[:, src]),
+                vp=pc.vp.at[:, dst].set(pc.vp[:, src]),
+                block=pc.block.at[:, slot, jdx].set(dst))
+        else:
+            pc = dataclasses.replace(
+                pc,
+                kp=pc.kp.at[dst].set(pc.kp[src]),
+                vp=pc.vp.at[dst].set(pc.vp[src]),
+                block=pc.block.at[slot, jdx].set(dst))
+        return self._replace(cache, st.where, pc)
+
+    def _attach_fn(self, cache, slot, args, zeros):
+        """Admit a slot from already-resident content: KV entries of
+        ``args`` are ``(block_row [n_lp] with -1 -> ZERO, length)`` —
+        only the block table and the batch length high-water mark move,
+        no page content is written; state entries are ``(pid, conv,
+        h)`` restored from a host snapshot exactly like
+        :meth:`restore` (state pages are never shared)."""
+        for si, st in enumerate(self.streams):
+            pc = self._get(cache, st.where)
+            grouped = st.where[0] == "groups"
+            if st.is_state:
+                pid, conv, h = args[si]
+                if grouped:
+                    pc = dataclasses.replace(
+                        pc,
+                        conv_p=pc.conv_p.at[:, pid].set(conv),
+                        h_p=pc.h_p.at[:, pid].set(h),
+                        block=pc.block.at[:, slot].set(pid))
+                else:
+                    pc = dataclasses.replace(
+                        pc,
+                        conv_p=pc.conv_p.at[pid].set(conv),
+                        h_p=pc.h_p.at[pid].set(h),
+                        block=pc.block.at[slot].set(pid))
+            else:
+                bids, length = args[si]
+                block_row = jnp.where(bids < 0, zeros[si], bids)
+                if grouped:
+                    block = pc.block.at[:, slot].set(block_row)
+                else:
+                    block = pc.block.at[slot].set(block_row)
+                pc = dataclasses.replace(
+                    pc, block=block,
+                    length=jnp.maximum(pc.length, length))
+            cache = self._replace(cache, st.where, pc)
+        return cache
 
     def _fetch_kv_fn(self, si, cache, ids):
         st = self.streams[si]
@@ -648,63 +962,265 @@ class PageTable:
                       for st in self.streams)
         return zeros, dumps
 
-    def admit(self, cache, one, slot: int, plen: int):
+    def admit(self, cache, one, slot: int, plen: int,
+              keys: Optional[PrefixKeys] = None):
         """Allocate pages (from ``slot``'s shard extent) for a freshly
         prefilled request and scatter its contiguous batch-1 cache into
-        them."""
+        them.
+
+        With ``keys`` (prefix sharing), each prompt page first probes
+        the shard's content registry: a hit attaches the live shared
+        page (block row points at it, refcount +1, the redundant
+        prefill write for that row lands in DUMP); a miss allocates as
+        before and registers the fresh page under its content key.
+        ``keys=None`` is the original allocator, bit for bit."""
         g = self.shard_of(slot)
-        pages = []
+        pages, blocks = [], []
+        adm = {"attached_pages": 0, "registered_pages": 0,
+               "attached_layer_tokens": 0, "total_layer_tokens": 0}
         for st in self.streams:
             if st.is_state:
                 pid = st.free[g].pop()
                 st.slot_pages[slot] = pid
                 pages.append(jnp.asarray(pid, jnp.int32))
-            else:
-                need = self.kv_pages_for(plen, st)
-                pids = [st.free[g].pop() for _ in range(need)]
-                st.slot_pages[slot] = dict(enumerate(pids))
-                vec = np.full((st.n_lp,), -1, np.int32)
-                vec[:need] = pids
-                pages.append(jnp.asarray(vec))
+                blocks.append(pages[-1])
+                continue
+            need = self.kv_pages_for(plen, st)
+            layers = self._stream_layers(st)
+            ok_share = keys is not None and self._shareable(st, plen)
+            held: Dict[int, int] = {}
+            vec = np.full((st.n_lp,), -1, np.int32)   # write ids
+            bvec = np.full((st.n_lp,), -1, np.int32)  # block rows
+            for j in range(need):
+                ptoks = (min(plen, (j + 1) * self.page_size)
+                         - j * self.page_size)
+                adm["total_layer_tokens"] += ptoks * layers
+                key = self._page_key(keys, j, plen) if ok_share else None
+                hit = st.shared[g].get(key) if key is not None else None
+                if hit is not None:
+                    st.ref[hit] += 1
+                    held[j] = hit
+                    bvec[j] = hit
+                    adm["attached_pages"] += 1
+                    adm["attached_layer_tokens"] += ptoks * layers
+                    self.stats["pages_attached"] += 1
+                else:
+                    pid = st.free[g].pop()
+                    held[j] = pid
+                    vec[j] = pid
+                    bvec[j] = pid
+                    if key is not None:
+                        self._register(st, g, key, pid)
+                        adm["registered_pages"] += 1
+            st.slot_pages[slot] = held
+            pages.append(jnp.asarray(vec))
+            blocks.append(jnp.asarray(bvec))
+        self.last_admit = adm
         zeros, dumps = self._reserved_ids(slot)
         return self._insert_jit(cache, one, jnp.asarray(slot, jnp.int32),
-                                tuple(pages), zeros, dumps)
+                                tuple(pages), tuple(blocks), zeros, dumps)
+
+    def state_snapshot(self, one) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Host copy of the batch-1 prefill cache's recurrent state,
+        keyed by stream index — what :meth:`admit_cached` writes back
+        (state pages are never shared, so the full-prompt memo restores
+        them through the same host round trip offload/restore uses)."""
+        host = jax.devices("cpu")[0]
+        snap = {}
+        for si, st in enumerate(self.streams):
+            if not st.is_state:
+                continue
+            oc = self._get(one, st.where)
+            grouped = st.where[0] == "groups"
+            conv = oc.conv[:, 0] if grouped else oc.conv[0]
+            h = oc.h[:, 0] if grouped else oc.h[0]
+            snap[si] = (np.asarray(jax.device_put(conv, host)),
+                        np.asarray(jax.device_put(h, host)))
+        return snap
+
+    def admit_cached(self, cache, slot: int, plen: int, keys: PrefixKeys,
+                     state_payload: Dict[int, Tuple[np.ndarray, np.ndarray]]):
+        """Admit a whole prompt from resident shared pages — the
+        full-skip path: every KV page of every stream attaches from the
+        registry (no prefill ran; :meth:`can_admit_cached` must hold),
+        recurrent state restores from ``state_payload`` (a
+        :meth:`state_snapshot` taken when the prompt first prefilled).
+        The KV length high-water mark is ``min(plen, cache_len)`` per
+        stream, exactly what the skipped prefill's admit would have
+        set."""
+        g = self.shard_of(slot)
+        args = []
+        adm = {"attached_pages": 0, "registered_pages": 0,
+               "attached_layer_tokens": 0, "total_layer_tokens": 0}
+        for si, st in enumerate(self.streams):
+            if st.is_state:
+                if si not in state_payload:
+                    raise PageTableError(
+                        f"admit_cached: no state snapshot for stream "
+                        f"{st.where} (kind={st.kind!r}) — the memo entry "
+                        f"must carry every recurrent stream")
+                pid = st.free[g].pop()
+                st.slot_pages[slot] = pid
+                conv, h = state_payload[si]
+                args.append((jnp.asarray(pid, jnp.int32),
+                             jnp.asarray(conv), jnp.asarray(h)))
+                continue
+            need = self.kv_pages_for(plen, st)
+            layers = self._stream_layers(st)
+            held: Dict[int, int] = {}
+            bvec = np.full((st.n_lp,), -1, np.int32)
+            for j in range(need):
+                pid = st.shared[g][self._page_key(keys, j, plen)]
+                st.ref[pid] += 1
+                held[j] = pid
+                bvec[j] = pid
+                ptoks = (min(plen, (j + 1) * self.page_size)
+                         - j * self.page_size)
+                adm["attached_pages"] += 1
+                adm["attached_layer_tokens"] += ptoks * layers
+                adm["total_layer_tokens"] += ptoks * layers
+                self.stats["pages_attached"] += 1
+            st.slot_pages[slot] = held
+            args.append((jnp.asarray(bvec),
+                         jnp.asarray(min(plen, st.cache_len), jnp.int32)))
+        self.stats["full_attaches"] += 1
+        self.last_admit = adm
+        zeros, _ = self._reserved_ids(slot)
+        return self._attach_jit(cache, jnp.asarray(slot, jnp.int32),
+                                tuple(args), zeros)
+
+    def joint_prefix_pages(self, slot: int, keys: Optional[PrefixKeys],
+                           plen: int) -> int:
+        """Longest run of *full* prompt pages resident in ``slot``'s
+        shard across **every** KV stream (the suffix-feed attach
+        depth), capped so at least one prompt token remains to feed.
+        Returns 0 for recurrent models (state is not addressable by
+        token prefix) or when any stream cannot share."""
+        if keys is None:
+            return 0
+        g = self.shard_of(slot)
+        k = min((plen - 1) // self.page_size, len(keys.full))
+        for st in self.streams:
+            if st.is_state or not self._shareable(st, plen):
+                return 0
+            run = 0
+            for j in range(k):
+                if st.shared[g].get(keys.full[j]) is None:
+                    break
+                run += 1
+            k = min(k, run)
+            if k == 0:
+                return 0
+        return k
+
+    def attach_prefix(self, cache, slot: int, keys: PrefixKeys, k: int):
+        """Suffix-feed admission: attach the first ``k`` full prompt
+        pages of every KV stream from the registry and nothing else —
+        the engine teacher-forces the remaining prompt tokens through
+        the decode step, which allocates its own write pages via
+        :meth:`prepare_step`."""
+        g = self.shard_of(slot)
+        args = []
+        adm = {"attached_pages": 0, "registered_pages": 0,
+               "attached_layer_tokens": 0, "total_layer_tokens": 0}
+        for si, st in enumerate(self.streams):
+            if st.is_state:
+                raise PageTableError(
+                    f"attach_prefix: stream {st.where} (kind={st.kind!r}) "
+                    f"is recurrent state; suffix-feed sharing is "
+                    f"attention-only")
+            layers = self._stream_layers(st)
+            held: Dict[int, int] = {}
+            bvec = np.full((st.n_lp,), -1, np.int32)
+            for j in range(k):
+                pid = st.shared[g][keys.full[j]]
+                st.ref[pid] += 1
+                held[j] = pid
+                bvec[j] = pid
+                adm["attached_pages"] += 1
+                adm["attached_layer_tokens"] += self.page_size * layers
+                adm["total_layer_tokens"] += self.page_size * layers
+                self.stats["pages_attached"] += 1
+            st.slot_pages[slot] = held
+            args.append((jnp.asarray(bvec),
+                         jnp.asarray(min(k * self.page_size, st.cache_len),
+                                     jnp.int32)))
+        self.last_admit = adm
+        zeros, _ = self._reserved_ids(slot)
+        return self._attach_jit(cache, jnp.asarray(slot, jnp.int32),
+                                tuple(args), zeros)
 
     def release(self, cache, slot: int):
-        """Free a retired slot's pages; its block rows return to DUMP."""
+        """Free a retired slot's pages; its block rows return to DUMP.
+        A shared (registered) page only drops one reference — it frees
+        when its last holder lets go."""
         g = self.shard_of(slot)
         for st in self.streams:
             held = st.slot_pages.pop(slot, None)
             if held is None:
                 continue
-            st.free[g].extend([held] if st.is_state else held.values())
+            for pid in ([held] if st.is_state else held.values()):
+                if pid in st.ref:
+                    self._decref(st, g, pid)
+                else:
+                    st.free[g].append(pid)
         _, dumps = self._reserved_ids(slot)
         return self._release_jit(cache, jnp.asarray(slot, jnp.int32), dumps)
 
-    def prepare_step(self, cache, slot: int, pos: int):
+    def prepare_step(self, cache, slot: int, pos: int,
+                     cow_events: Optional[List[Tuple[int, int]]] = None):
         """Ensure the page each KV stream will write at ``pos`` is
-        assigned (from ``slot``'s shard extent).  Returns
-        ``(cache, ok)``; ``ok`` is False when a pool is exhausted (the
-        engine must preempt a victim and retry).
+        assigned (from ``slot``'s shard extent) **and private** to this
+        slot.  Returns ``(cache, ok)``; ``ok`` is False when a pool is
+        exhausted (the engine must preempt a victim and retry).
+
+        Copy-on-write: when the write lands in a *shared* page
+        (refcount > 1) the slot forks — a fresh page is allocated, the
+        shared content copied device-side, and the block row
+        re-targeted; when the slot is the page's *sole* holder
+        (refcount == 1) it simply unregisters the page in place and
+        writes through, making every append/ring-wrap bit-identical to
+        unshared serving.  Each fork appends ``(stream_index,
+        layer_tokens_copied)`` to ``cow_events`` for telemetry.
 
         Invariant — *partial progress is committed*: page assignments
-        for streams visited before the exhausted one stay in the cache
-        and in ``slot_pages`` even on the ``ok=False`` return.  That is
-        deliberate and safe: an assigned page is recorded under its
-        ``jdx``, so the post-preemption retry skips it (``jdx in
-        held``) and only allocates the still-missing streams, and the
-        page content is all-zeros until the decode step actually writes
-        through the block table — generations are bit-identical to a
-        serve that never exhausted the pool
-        (``tests/test_paged_cache.py`` pins this).  Callers must not
-        assume the cache is untouched when ``ok`` is False."""
+        (and forks) for streams visited before the exhausted one stay
+        in the cache and in ``slot_pages`` even on the ``ok=False``
+        return.  That is deliberate and safe: an assigned page is
+        recorded under its ``jdx``, so the post-preemption retry skips
+        it (a forked page is private, so the retry's ``ref`` probe
+        skips it too) and only the still-missing streams act, and page
+        content stays consistent until the decode step writes through
+        the block table — generations are bit-identical to a serve
+        that never exhausted the pool (``tests/test_paged_cache.py``
+        pins this).  Callers must not assume the cache is untouched
+        when ``ok`` is False."""
         g = self.shard_of(slot)
         for si, st in enumerate(self.streams):
             if st.is_state:
                 continue
             jdx = (pos % st.cache_len) // self.page_size
             held = st.slot_pages[slot]
-            if jdx in held:
+            pid = held.get(jdx)
+            if pid is not None:
+                if pid not in st.ref:
+                    continue              # private page: write through
+                if st.ref[pid] == 1:
+                    self._unregister(st, pid)   # sole holder: take it
+                    continue                    # private in place
+                if not st.free[g]:
+                    return cache, False
+                dst = st.free[g].pop()
+                st.ref[pid] -= 1
+                held[jdx] = dst
+                cache = self._fork_jit[si](
+                    cache, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(pid, jnp.int32), jnp.asarray(dst, jnp.int32),
+                    jnp.asarray(jdx, jnp.int32))
+                self.stats["cow_forks"] += 1
+                if cow_events is not None:
+                    cow_events.append(
+                        (si, self.page_size * self._stream_layers(st)))
                 continue
             if not st.free[g]:
                 return cache, False
@@ -745,7 +1261,14 @@ class PageTable:
                 kv[si] = (dict(zip(jdxs, range(len(jdxs)))),
                           np.asarray(jax.device_put(kpg, host)),
                           np.asarray(jax.device_put(vpg, host)))
-                st.free[g].extend(held.values())
+                # the host payload owns a private copy of shared pages,
+                # so offload just drops this slot's references; restore
+                # later allocates fresh private pages
+                for pid in held.values():
+                    if pid in st.ref:
+                        self._decref(st, g, pid)
+                    else:
+                        st.free[g].append(pid)
         _, dumps = self._reserved_ids(slot)
         cache = self._release_jit(cache, jnp.asarray(slot, jnp.int32), dumps)
         return cache, PagePayload(kv=kv, state=state, tokens=int(tokens))

@@ -44,6 +44,24 @@ reports its backend through :meth:`ServeTelemetry.configure_decode`:
   materialized-view traffic, which is the point of the kernel.
 * ``contiguous`` (no paging) — row-exact sweep of the live context,
   unchanged from the seed accounting.
+
+Prefix sharing (PR 10) adds a fourth class.  When admission attaches
+registry pages instead of scattering fresh content
+(:mod:`repro.serve.paging`), :meth:`ServeTelemetry.record_admit_shared`
+splits the admission's KV bytes into *hit* (layer-tokens served by
+already-resident shared pages — admission work avoided) and *written*
+(the novel remainder plus the always-private recurrent state), with the
+exact-int invariant ``hit + written == unshared total`` per admission
+(test-pinned in ``tests/test_prefix_sharing.py``).  Copy-on-write forks
+are the only device traffic sharing *adds*: each fork bills one page
+read + one page write (:meth:`ServeTelemetry.record_cow`), and those
+``cow`` bytes join the workload profile's KV streams so the RTC number
+never flatters sharing.  Hit bytes stay *out* of the profile: the
+dedup-attach admission still physically scatters its redundant rows
+into the DUMP page, so the saving is realized as a smaller live row set
+(the trace/placement path bills it), while full-skip admissions avoid
+the prefill compute outright and are counted in
+``prefix_full_skips``.
 """
 from __future__ import annotations
 
@@ -117,6 +135,15 @@ class TrafficModel:
         """KV bytes one slot with ``ctx`` cached tokens reads per step."""
         return sum(min(ctx, c) * b
                    for c, b in zip(self.kv_caps, self.kv_token_bytes))
+
+    @property
+    def kv_page_token_bytes(self) -> int:
+        """K+V bytes of ONE cached token in ONE attention layer —
+        uniform across layers (KV heads and head_dim do not vary per
+        layer), so it is the single conversion constant for the
+        prefix-sharing *layer-token* accounting
+        (:meth:`ServeTelemetry.record_admit_shared`)."""
+        return self.kv_token_bytes[0] if self.kv_token_bytes else 0
 
     @property
     def kv_write_bytes(self) -> int:
@@ -274,6 +301,18 @@ class ServeTelemetry:
         self.page_in_bytes_total = 0     # restored page bytes (DRAM writes)
         self.gather_read_bytes_total = 0   # phantom view gathers (reads)
         self.gather_write_bytes_total = 0  # phantom view copies (writes)
+        # Prefix-sharing accounting (all zero unless the engine serves
+        # with PrefixSharingConfig): per-admission hit/written split
+        # plus the copy-on-write fork traffic — the only bytes sharing
+        # ADDS to the device.
+        self.prefix_admits = 0           # admissions that touched keys
+        self.prefix_full_skips = 0       # whole-prompt memo admissions
+        self.prefix_suffix_feeds = 0     # opt-in suffix-feed admissions
+        self.prefix_hit_tokens = 0       # layer-tokens attached, not written
+        self.prefix_hit_bytes_total = 0    # hit layer-tokens as KV bytes
+        self.admit_write_bytes_total = 0   # novel admission KV+state bytes
+        self.cow_read_bytes_total = 0      # fork page copies (DRAM reads)
+        self.cow_write_bytes_total = 0     # fork page copies (DRAM writes)
 
     def configure_decode(self, backend: str, paged: bool) -> None:
         """Engine hook: map its (decode_backend, paged?) pair onto the
@@ -341,6 +380,70 @@ class ServeTelemetry:
     def _scaled(self, ctx: int) -> int:
         return int(round(ctx * self.ctx_scale))
 
+    def record_admit_shared(self, plen: int, hit_layer_tokens: int,
+                            total_layer_tokens: int,
+                            skipped_prefill: bool = False,
+                            suffix_feed: bool = False) -> None:
+        """One prefix-aware admission, split hit vs written.
+
+        ``hit_layer_tokens`` — (layer, token) cells served by attaching
+        already-resident shared pages; ``total_layer_tokens`` — the
+        cells the same admission writes without sharing (the
+        :attr:`PageTable.last_admit <repro.serve.paging.PageTable>`
+        pair).  Bytes are exact ints off
+        :attr:`TrafficModel.kv_page_token_bytes`, and per admission
+        ``hit_bytes + written_bytes == total_layer_tokens *
+        kv_page_token_bytes + state_bytes`` — the unshared admission
+        total — holds by construction (the exact-sum invariant the
+        tests pin; recurrent state is always written, never shared).
+
+        ``skipped_prefill`` marks a full-prompt memo admission: no
+        prefill executable ran, but the request still emits its first
+        token off the memoized logits, so it accounts as one prefill
+        event of ``plen`` true tokens with zero pad waste.
+        ``suffix_feed`` marks the opt-in teacher-forced path (its novel
+        suffix bills as ordinary decode steps, so only the attached
+        prefix appears here)."""
+        bpt = self.traffic.kv_page_token_bytes
+        hit = int(hit_layer_tokens)
+        total = int(total_layer_tokens)
+        if hit > total:
+            raise ValueError(
+                f"record_admit_shared: hit_layer_tokens={hit} exceeds "
+                f"total_layer_tokens={total}")
+        self.prefix_admits += 1
+        self.prefix_hit_tokens += hit
+        self.prefix_hit_bytes_total += hit * bpt
+        self.admit_write_bytes_total += ((total - hit) * bpt
+                                         + self.traffic.state_bytes)
+        if skipped_prefill:
+            self.prefix_full_skips += 1
+            self.n_prefills += 1
+            self.prefill_tokens += int(plen)
+            self.prefill_padded_tokens += int(plen)
+            self.tokens_generated += 1
+        if suffix_feed:
+            self.prefix_suffix_feeds += 1
+
+    def record_cow(self, layer_tokens: int) -> None:
+        """One copy-on-write fork: ``layer_tokens`` (layer, token)
+        cells copied device-side from the shared page into the private
+        one — one whole-page read plus one whole-page write, unscaled
+        (a fork moves exactly one page per stream at any context
+        scale)."""
+        b = int(layer_tokens) * self.traffic.kv_page_token_bytes
+        self.cow_read_bytes_total += b
+        self.cow_write_bytes_total += b
+
+    @property
+    def prefix_hit_frac(self) -> float:
+        """Fraction of prefix-aware admission bytes served by shared
+        pages (0.0 when sharing never engaged)."""
+        denom = self.prefix_hit_bytes_total + self.admit_write_bytes_total
+        if not denom:
+            return 0.0
+        return self.prefix_hit_bytes_total / denom
+
     def record_page_out(self, ctx: int) -> None:
         """One slot offload: its resident pages (a ``ctx``-token context)
         leave device DRAM for host memory."""
@@ -381,13 +484,19 @@ class ServeTelemetry:
         # gather-mode phantom traffic folds into the KV read/write
         # streams (the view copy moves through the same DRAM rows the
         # KV sweep walks); the split stays visible in the accumulators.
+        # copy-on-write fork copies ride the KV streams too: sharing's
+        # only added device traffic must reach the RTC number (hit
+        # bytes do NOT join — dedup-attach realizes its saving through
+        # the smaller live row set the trace/placement path bills)
         return from_decode(
             name,
             param_read_bytes=self.param_read_bytes_total / n,
             kv_read_bytes=(self.kv_read_bytes_total
-                           + self.gather_read_bytes_total) / n,
+                           + self.gather_read_bytes_total
+                           + self.cow_read_bytes_total) / n,
             kv_write_bytes=(self.write_bytes_total
-                            + self.gather_write_bytes_total) / n,
+                            + self.gather_write_bytes_total
+                            + self.cow_write_bytes_total) / n,
             page_out_bytes=self.page_out_bytes_total / n,
             page_in_bytes=self.page_in_bytes_total / n,
             footprint_bytes=footprint,

@@ -1,0 +1,17 @@
+"""Training loop: jitted sharded steps, AdamW, and a production trainer.
+
+``optimizer.py`` is a self-contained AdamW (+LR schedules, global-norm
+clipping) so the repo has no optax dependency; ``step.py`` builds the
+jitted train/eval steps (donated optimizer state, gradient
+accumulation, `repro.dist` shardings applied to params and batch);
+``trainer.py`` wires them into a production loop — checkpoint/restart
+through :mod:`repro.checkpoint` (atomic, content-verified), preemption
+handling, and elastic re-mesh on restore (a checkpoint written on one
+mesh restores onto another via the policy's resharding rules).
+
+Training exists here to exercise the same sharded model/dist stack the
+serving path uses — the RTC reproduction itself is inference/energy
+focused (see ``docs/ARCHITECTURE.md``), so this package stays small
+and dependency-free rather than growing toward a full training
+framework.
+"""

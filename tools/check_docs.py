@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Documentation gate: markdown link-check + package-docstring lint.
+
+Two checks, both pure stdlib (no jax — this must run in a bare CI
+container in seconds):
+
+1. **Link check.**  Every markdown link in ``README.md``,
+   ``ROADMAP.md``, ``CHANGES.md``, and ``docs/*.md`` must resolve:
+   relative targets must exist on disk (relative to the file holding
+   the link), and ``#anchor`` fragments must match a heading in the
+   target file (GitHub's slug rules: lowercase, punctuation stripped,
+   spaces to hyphens).  External ``http(s)://`` links are not fetched —
+   this gate is about the repo's own files staying in sync with the
+   prose that cites them.
+
+2. **Design-note docstring lint.**  Every ``src/repro/*`` package (and
+   ``repro`` itself) must open with a non-trivial module docstring —
+   the package docstrings ARE the design record (see
+   ``docs/ARCHITECTURE.md``), so an empty or one-liner docstring on a
+   package is a regression.  Parsed with ``ast``; nothing is imported.
+
+Exit status is the number of problems (0 = green).  Run from anywhere:
+``python tools/check_docs.py``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_FILES = ["README.md", "ROADMAP.md", "CHANGES.md"]
+DOCS_DIR = "docs"
+PKG_ROOT = os.path.join("src", "repro")
+MIN_DOCSTRING_CHARS = 200   # a design note, not a placeholder
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must resolve too.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading-to-anchor slug (the subset we rely on)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)             # inline markup
+    s = re.sub(r"[^\w\- ]", "", s)          # punctuation
+    return s.replace(" ", "-")
+
+
+def md_anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = _CODE_FENCE.sub("", f.read())
+    return {github_slug(h) for h in _HEADING.findall(text)}
+
+
+def iter_md_files():
+    for name in MD_FILES:
+        p = os.path.join(REPO, name)
+        if os.path.exists(p):
+            yield p
+    docs = os.path.join(REPO, DOCS_DIR)
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                yield os.path.join(docs, name)
+
+
+def check_links() -> list:
+    problems = []
+    for md in iter_md_files():
+        rel_md = os.path.relpath(md, REPO)
+        with open(md, encoding="utf-8") as f:
+            text = _CODE_FENCE.sub("", f.read())
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(md), path_part))
+                if not os.path.exists(dest):
+                    problems.append(
+                        f"{rel_md}: dead link -> {target} "
+                        f"(no such file {os.path.relpath(dest, REPO)})")
+                    continue
+            else:
+                dest = md
+            if anchor:
+                if not dest.endswith(".md"):
+                    continue            # anchors into code: not checked
+                if anchor not in md_anchors(dest):
+                    problems.append(
+                        f"{rel_md}: dead anchor -> {target} "
+                        f"(no heading slug '{anchor}' in "
+                        f"{os.path.relpath(dest, REPO)})")
+    return problems
+
+
+def check_docstrings() -> list:
+    problems = []
+    root = os.path.join(REPO, PKG_ROOT)
+    # `repro` itself is a namespace package (no __init__.py); the lint
+    # covers every src/repro/* subpackage, and a subpackage missing its
+    # __init__.py entirely is itself a finding.
+    inits = []
+    for d in sorted(os.listdir(root)):
+        if not os.path.isdir(os.path.join(root, d)) or d.startswith("__"):
+            continue
+        init = os.path.join(root, d, "__init__.py")
+        if not os.path.exists(init):
+            problems.append(
+                f"{PKG_ROOT}/{d}: no __init__.py — every repro "
+                f"subpackage carries its design note there")
+            continue
+        inits.append(init)
+    for init in inits:
+        rel = os.path.relpath(init, REPO)
+        try:
+            tree = ast.parse(open(init, encoding="utf-8").read())
+        except SyntaxError as e:
+            problems.append(f"{rel}: unparseable ({e})")
+            continue
+        doc = ast.get_docstring(tree) or ""
+        if len(doc.strip()) < MIN_DOCSTRING_CHARS:
+            problems.append(
+                f"{rel}: package docstring is "
+                f"{len(doc.strip())} chars (< {MIN_DOCSTRING_CHARS}) — "
+                f"packages carry their design notes in the docstring")
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_docstrings()
+    for p in problems:
+        print(f"FAIL {p}")
+    n_md = len(list(iter_md_files()))
+    print(f"checked {n_md} markdown files + src/repro package "
+          f"docstrings: {len(problems)} problem(s)")
+    return min(len(problems), 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
